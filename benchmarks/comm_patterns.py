@@ -1,0 +1,56 @@
+"""Benchmark for Figures 1.3-1.7 / 3.4-3.5 / 4.1-4.2 / 5.2-5.3: the
+communication patterns under the §1.3 switch model, swept over worker count
+and latency/bandwidth regimes."""
+from __future__ import annotations
+
+from repro.core import eventsim
+
+
+def sweep(size_mb: float = 100.0):
+    rows = []
+    for n in (4, 8, 16, 64, 256):
+        for (alpha, beta, regime) in ((1e-4, 1e-2, "bw-bound"),
+                                      (1e-2, 1e-4, "lat-bound")):
+            ps = eventsim.single_ps_makespan(n, size_mb, t_lat=alpha,
+                                             t_tr=beta)
+            ar = eventsim.ring_allreduce_makespan(n, size_mb, t_lat=alpha,
+                                                  t_tr=beta)
+            ar_nopart = eventsim.ring_allreduce_makespan(
+                n, size_mb, t_lat=alpha, t_tr=beta, partitioned=False)
+            csgd = eventsim.ring_allreduce_makespan(
+                n, size_mb, t_lat=alpha, t_tr=beta, compression=4.0)
+            dec = eventsim.decentralized_makespan(n, size_mb, t_lat=alpha,
+                                                  t_tr=beta)
+            rows.append((n, regime, ps, ar, ar_nopart, csgd, dec))
+    return rows
+
+
+def async_vs_sync(n: int = 8):
+    """Figure 4.1/4.2: updates per second, sync barrier vs async PS."""
+    t_compute = [1.0] * (n - 1) + [4.0]       # one straggler
+    sync = eventsim.sync_ps_throughput(n, t_compute_max=max(t_compute),
+                                       t_lat=0.01, t_tr=0.002, size=1.0)
+    updates = eventsim.async_ps_timeline(n, t_compute=t_compute, t_lat=0.01,
+                                         t_tr=0.002, size=1.0, horizon=200.0)
+    async_tput = len(updates) / 200.0
+    max_stale = max(s for _, _, s in updates)
+    return sync, async_tput, max_stale
+
+
+def main():
+    print("# Communication patterns under the Section 1.3 switch model "
+          "(makespan, seconds)")
+    print(f"{'N':>4s} {'regime':>9s} {'PS':>10s} {'ringAR':>10s} "
+          f"{'AR-nopart':>10s} {'CSGD(4x)':>10s} {'DSGD':>10s}")
+    for n, regime, ps, ar, nop, csgd, dec in sweep():
+        print(f"{n:4d} {regime:>9s} {ps:10.3f} {ar:10.3f} {nop:10.3f} "
+              f"{csgd:10.3f} {dec:10.3f}")
+    sync, asyn, stale = async_vs_sync()
+    print(f"\n# Figure 4.1/4.2 — sync vs async PS with one 4x straggler")
+    print(f"sync updates/s {sync:.2f} | async updates/s {asyn:.2f} "
+          f"(speedup {asyn / sync:.2f}x, max staleness {stale})")
+    return f"async_speedup={asyn / sync:.2f}"
+
+
+if __name__ == "__main__":
+    main()

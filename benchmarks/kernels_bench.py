@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-scale only;
+the numbers that matter for the TPU target are the VMEM working sets and
+roofline estimates printed alongside)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import ops as fa_ops
+from repro.kernels.quant import ops as q_ops
+from repro.kernels.wkv6 import ops as wkv_ops
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    x = jax.random.normal(key, (1 << 20,))
+    us = _time(lambda a: q_ops.quantize_dequantize(a, key, bits=8), x)
+    # TPU estimate: pure-VPU 2 passes over 4B+4B read + 4B write / 819GB/s
+    est = (x.size * 12) / HBM_BW * 1e6
+    rows.append(("quant_qdq_1M", us, f"tpu_mem_bound_est={est:.1f}us"))
+
+    q = jax.random.normal(key, (1, 1024, 8, 128), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 128), jnp.float32)
+    v = jax.random.normal(key, (1, 1024, 2, 128), jnp.float32)
+    us = _time(lambda a, b, c: fa_ops.flash_attention(a, b, c, causal=True),
+               q, k, v)
+    flops = 2 * 2 * 1024 * 1024 * 8 * 128  # qk + av
+    est = flops / PEAK_FLOPS_BF16 * 1e6
+    rows.append(("flash_attn_1k", us, f"tpu_mxu_est={est:.1f}us"))
+
+    r = jax.random.normal(key, (1, 512, 4, 64)) * 0.5
+    kk = jax.random.normal(key, (1, 512, 4, 64)) * 0.5
+    vv = jax.random.normal(key, (1, 512, 4, 64)) * 0.5
+    lw = -jnp.exp(jax.random.normal(key, (1, 512, 4, 64)) * 0.3 - 2.5)
+    u = jax.random.normal(key, (4, 64)) * 0.1
+    us = _time(lambda *a: wkv_ops.wkv6(*a)[0], r, kk, vv, lw, u)
+    rows.append(("wkv6_512", us, "chunked-scan"))
+
+    print("# Kernel microbenchmarks (CPU interpret mode — correctness tier)")
+    print(f"{'name':16s} {'us_per_call':>12s}  derived")
+    for name, us, derived in rows:
+        print(f"{name:16s} {us:12.0f}  {derived}")
+    return ",".join(f"{n}={u:.0f}us" for n, u, _ in rows)
+
+
+if __name__ == "__main__":
+    main()

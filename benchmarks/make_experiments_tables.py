@@ -1,0 +1,76 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables
+from benchmarks/dryrun_results.jsonl. Run after a fresh dry-run sweep."""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro import configs
+from repro.models.common import INPUT_SHAPES
+
+sys.path.insert(0, ".")
+from benchmarks import roofline  # noqa: E402
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = roofline.load_records(mesh=mesh)
+    lines = [
+        f"| arch | shape | dot FLOPs/dev | coll bytes/dev | temp GiB/dev "
+        f"| args GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in configs.ASSIGNED:
+        for shape in INPUT_SHAPES:
+            r = recs.get((arch, shape))
+            if not r:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | |")
+                continue
+            nd = r["n_devices"]
+            lines.append(
+                f"| {arch} | {shape} | {r['dot_flops']:.2e} | "
+                f"{r['collectives']['total']:.2e} | "
+                f"{r['temp_size_in_bytes'] / nd / 2**30:.2f} | "
+                f"{r['argument_size_in_bytes'] / 2**30:.2f} | "
+                f"{r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = roofline.full_table()
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL/HLO |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def fit_check(mesh: str = "16x16") -> str:
+    recs = roofline.load_records(mesh=mesh)
+    bad = []
+    for (arch, shape), r in recs.items():
+        per_dev = (r["temp_size_in_bytes"] / r["n_devices"]
+                   + r["argument_size_in_bytes"]) / 2**30
+        if per_dev > 16.0:
+            bad.append((arch, shape, per_dev))
+    if not bad:
+        return ("All combinations fit: max per-device (temp/devices + args) "
+                + f"= {max((r['temp_size_in_bytes']/r['n_devices'] + r['argument_size_in_bytes'])/2**30 for r in recs.values()):.2f}"
+                + " GiB < 16 GiB HBM.")
+    return "OVER HBM: " + ", ".join(f"{a}x{s}={g:.1f}GiB" for a, s, g in bad)
+
+
+if __name__ == "__main__":
+    print("## Single-pod 16x16\n")
+    print(dryrun_table("16x16"))
+    print("\n## Multi-pod 2x16x16\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Roofline\n")
+    print(roofline_table())
+    print("\n## HBM fit\n")
+    print(fit_check())

@@ -1,0 +1,125 @@
+"""Roofline analysis from the dry-run records (deliverable g).
+
+Reads benchmarks/dryrun_results.jsonl (written by repro.launch.dryrun) and
+derives, per (arch x input-shape) on the single-pod mesh:
+
+  compute term    = HLO_dot_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill/decode), the
+useful-compute ratio MODEL/HLO (catches remat + redundancy waste), the
+dominant bottleneck, and a what-would-move-it note.
+
+Byte caveat: XLA's `bytes accessed` counts while bodies once; we scale it by
+the dot-FLOPs loop factor (trip-count-aware / body-once) — an approximation
+recorded in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro import configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.common import INPUT_SHAPES
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results.jsonl")
+
+
+def load_records(path: str = RESULTS, mesh: str = "16x16") -> dict:
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("mesh") == mesh:
+                recs[(r["arch"], r["shape"])] = r   # last write wins
+    return recs
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def derive(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    flops_dev = rec["dot_flops"]                  # per-device (trip-aware)
+    body_once = max(rec.get("flops_body_once", 0.0), 1.0)
+    loop_factor = max(1.0, flops_dev / body_once)
+    bytes_dev = rec.get("bytes_accessed_body_once", 0.0) * loop_factor
+    coll_dev = rec["collectives"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops_dev * n_dev, 1.0)
+    advice = {
+        "compute": "raise MXU utilization: larger per-device batch/seq "
+                   "tiles, fuse attention (flash kernel), drop remat "
+                   "recompute on cheap blocks",
+        "memory": "cut HBM traffic: bf16 activations end-to-end, fuse "
+                  "elementwise chains, larger matmul tiles (reuse), "
+                  "quantized KV cache",
+        "collective": "cut bytes on the wire: gradient compression "
+                      "(the paper's CSGD/EC-SGD), reduce-scatter instead "
+                      "of all-reduce+all-gather, overlap collectives with "
+                      "the scan body",
+    }[dominant]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": flops_dev * n_dev,
+        "useful_ratio": useful, "advice": advice,
+        "hbm_args_gib": rec["argument_size_in_bytes"] / 2**30,
+        "hbm_temp_gib_per_dev": rec["temp_size_in_bytes"] / n_dev / 2**30,
+    }
+
+
+def full_table(mesh: str = "16x16") -> list:
+    recs = load_records(mesh=mesh)
+    rows = []
+    for arch in configs.ASSIGNED:
+        for shape in INPUT_SHAPES:
+            if (arch, shape) in recs:
+                rows.append(derive(recs[(arch, shape)]))
+    return rows
+
+
+def main():
+    rows = full_table()
+    if not rows:
+        print("# roofline: no dry-run records found "
+              "(run python -m repro.launch.dryrun --all first)")
+        return "missing"
+    print("# Roofline terms per (arch x shape), single-pod 16x16 "
+          "(seconds/step; v5e constants)")
+    print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+          f"{'collect':>10s} {'dominant':>10s} {'useful':>7s}")
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f}")
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return ",".join(f"{k}={v}" for k, v in sorted(dom.items()))
+
+
+if __name__ == "__main__":
+    main()

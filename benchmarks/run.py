@@ -1,0 +1,37 @@
+"""Benchmark harness entry point — one module per paper table/figure:
+
+  table1_1        Table 1.1  iterations-to-eps + comm cost per relaxation
+  table1_2        Table 1.2  GD/SGD/mb-SGD iteration vs query complexity
+  comm_patterns   Figures 1.3-1.7, 3.4/3.5, 4.1/4.2, 5.2/5.3 (switch model)
+  kernels_bench   Pallas kernel micro-benchmarks (interpret tier)
+  roofline        Deliverable (g): per-(arch x shape) roofline terms from
+                  the compiled dry-run records
+
+Prints one ``name,us_per_call,derived`` CSV line per benchmark (wall time =
+time to produce the table; the tables themselves go to stdout above it).
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (comm_patterns, kernels_bench, roofline,
+                            table1_1, table1_2)
+    csv_lines = []
+    for name, mod in [("table1_1", table1_1), ("table1_2", table1_2),
+                      ("comm_patterns", comm_patterns),
+                      ("kernels_bench", kernels_bench),
+                      ("roofline", roofline)]:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        derived = mod.main()
+        us = (time.time() - t0) * 1e6
+        csv_lines.append(f"{name},{us:.0f},{derived}")
+    print("\n# CSV")
+    for line in csv_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

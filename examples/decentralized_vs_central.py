@@ -1,0 +1,59 @@
+"""Decentralized vs centralized training (Section 5) on heterogeneous data.
+
+Shows the three regimes of Theorem 5.2.6 side by side:
+  * fully-connected gossip (rho = 0)  == mb-SGD,
+  * ring gossip (rho ~ 1 - 4pi^2/3N^2) converges with a consensus phase,
+  * heterogeneous data (varsigma > 0) raises the DSGD floor,
+and the latency win that motivates it all: O(1) vs O(N) switch latency.
+
+Run:  PYTHONPATH=src python examples/decentralized_vs_central.py
+"""
+import numpy as np
+
+from repro.core import eventsim, mixing, parallel
+
+N = 16
+STEPS = 500
+
+
+def tail(res):
+    return float(np.asarray(res.grad_norms)[-20:].mean())
+
+
+def main():
+    ring_rho = mixing.spectral_rho(mixing.ring(N))
+    print(f"N={N} workers | ring rho={ring_rho:.4f} "
+          f"(exact 1-4pi^2/3N^2 ~ {1 - 4 * np.pi**2 / (3 * N**2):.4f}; "
+          "the paper's 16pi^2 estimate is an erratum, see tests)")
+
+    central = parallel.run_quadratic("mbsgd", n_workers=N, steps=STEPS,
+                                     lr=0.1)
+    ring_homo = parallel.run_quadratic("dsgd", n_workers=N, steps=STEPS,
+                                       lr=0.1)
+    ring_hetero = parallel.run_quadratic("dsgd", n_workers=N, steps=STEPS,
+                                         lr=0.1, heterogeneity=1.0)
+    full_topo = parallel.run_quadratic("dsgd", n_workers=N, steps=STEPS,
+                                       lr=0.1, gossip_topology="full")
+
+    print(f"\n{'setup':34s} {'final |grad|^2':>14s} {'consensus':>12s}")
+    for name, res in [("centralized mb-SGD", central),
+                      ("DSGD ring, homogeneous data", ring_homo),
+                      ("DSGD ring, heterogeneous data", ring_hetero),
+                      ("DSGD fully-connected (== mb-SGD)", full_topo)]:
+        print(f"{name:34s} {tail(res):14.6f} "
+              f"{float(res.consensus[-1]):12.8f}")
+
+    print("\nPer-iteration communication (switch model, 100MB model, "
+          "alpha=10ms [high-latency WAN], beta=1ms/MB):")
+    for name, t in [
+        ("AllReduce / multi-PS", eventsim.ring_allreduce_makespan(
+            N, 100.0, t_lat=1e-2, t_tr=1e-3)),
+        ("DSGD ring exchange", eventsim.decentralized_makespan(
+            N, 100.0, t_lat=1e-2, t_tr=1e-3)),
+    ]:
+        print(f"  {name:28s} {t * 1e3:8.1f} ms")
+    print("High latency is exactly where decentralization wins (Section 5).")
+
+
+if __name__ == "__main__":
+    main()

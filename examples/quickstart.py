@@ -1,0 +1,75 @@
+"""Quickstart: every system relaxation of the paper in one run.
+
+Trains the same distributed least-squares problem (Section 1.1.3's example)
+with 8 workers under each algorithm, prints the convergence table and the
+modeled wall-clock per iteration under the Section 1.3 switch model —
+reproducing the story of Table 1.1: relaxations don't beat mb-SGD on
+iterations, they beat it on *time per iteration*.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import eventsim, mixing, parallel
+
+N_WORKERS = 8
+STEPS = 400
+SIZE_MB = 100.0          # model size on the wire
+ALPHA, BETA = 1e-3, 1e-2  # switch latency (s), s/MB at the NIC
+
+
+def main():
+    runs = {
+        "mb-SGD (baseline)": ("mbsgd", {}, None),
+        "CSGD rq4 (PS form)": ("csgd_ps", {"compressor": "rq4"}, None),
+        "CSGD rq8 (ring form)": ("csgd_ring", {"compressor": "rq8"}, None),
+        "EC-SGD 1-bit sign": ("ecsgd", {"compressor": "sign1"}, None),
+        "ASGD tau=8": ("asgd", {"tau": 8}, None),
+        "DSGD ring": ("dsgd", {}, None),
+    }
+    def comm_time(alpha, beta):
+        return {
+            "mb-SGD (baseline)": eventsim.ring_allreduce_makespan(
+                N_WORKERS, SIZE_MB, t_lat=alpha, t_tr=beta),
+            "CSGD rq4 (PS form)": eventsim.multi_ps_makespan(
+                N_WORKERS, SIZE_MB, t_lat=alpha, t_tr=beta, compression=8),
+            "CSGD rq8 (ring form)": eventsim.ring_allreduce_makespan(
+                N_WORKERS, SIZE_MB, t_lat=alpha, t_tr=beta, compression=4),
+            "EC-SGD 1-bit sign": eventsim.multi_ps_makespan(
+                N_WORKERS, SIZE_MB, t_lat=alpha, t_tr=beta, compression=32),
+            "ASGD tau=8": eventsim.single_ps_makespan(
+                N_WORKERS, SIZE_MB, t_lat=alpha, t_tr=beta) / N_WORKERS,
+            "DSGD ring": eventsim.decentralized_makespan(
+                N_WORKERS, SIZE_MB, t_lat=alpha, t_tr=beta),
+        }
+
+    # bandwidth-bound datacenter vs latency-bound WAN (Section 1.3.2/5.1
+    # discussions: compression helps the former, decentralization the latter)
+    bw = comm_time(ALPHA, BETA)
+    wan = comm_time(0.25, 1e-3)
+
+    print(f"workers={N_WORKERS} steps={STEPS} | switch model: "
+          f"datacenter(a={ALPHA}s b={BETA}s/MB) vs WAN(a=0.25s b=1ms/MB), "
+          f"model={SIZE_MB}MB")
+    print(f"ring rho = {mixing.spectral_rho(mixing.ring(N_WORKERS)):.4f}")
+    print(f"\n{'algorithm':22s} {'final |grad|^2':>14s} {'consensus':>10s} "
+          f"{'dc s/it':>9s} {'dc x':>6s} {'wan s/it':>9s} {'wan x':>6s}")
+    base_bw, base_wan = bw["mb-SGD (baseline)"], wan["mb-SGD (baseline)"]
+    for name, (method, kw, _) in runs.items():
+        res = parallel.run_quadratic(method, n_workers=N_WORKERS,
+                                     steps=STEPS, lr=0.1,
+                                     exchange_kw=kw or None)
+        g = float(np.asarray(res.grad_norms)[-20:].mean())
+        c = float(res.consensus[-1])
+        print(f"{name:22s} {g:14.6f} {c:10.6f} {bw[name]:9.3f} "
+              f"{base_bw / bw[name]:5.1f}x {wan[name]:9.3f} "
+              f"{base_wan / wan[name]:5.1f}x")
+    print("\nReading: every relaxation converges (col 2), DSGD reaches "
+          "consensus (col 3);\ncompression wins the bandwidth-bound "
+          "datacenter, decentralization wins the\nlatency-bound WAN, and "
+          "ASGD's win is straggler-hiding (benchmarks/comm_patterns.py) — "
+          "the Table 1.1 story.")
+
+
+if __name__ == "__main__":
+    main()

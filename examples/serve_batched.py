@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + autoregressive decode with KV /
+recurrent caches across three architecture families.
+
+Runs the reduced configs of a dense (GQA), an SSM (RWKV6) and a hybrid
+(RecurrentGemma) model through the same serve_step API — the point being
+that the decode state abstraction (ring-buffer KV cache, O(1) recurrent
+state) is uniform, which is what lets `long_500k` lower for every family
+in the dry-run.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve as serve_cli
+
+
+def main():
+    for arch, extra in [("qwen1.5-0.5b", ["--window", "16"]),
+                        ("rwkv6-3b", []),
+                        ("recurrentgemma-9b", [])]:
+        print(f"\n==== {arch} (reduced) ====")
+        serve_cli.main(["--arch", arch, "--reduced", "--batch", "2",
+                        "--prompt-len", "12", "--gen", "12"] + extra)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""End-to-end driver: train the ~115M-param `repro-100m` decoder LM for a
+few hundred steps on the synthetic bigram corpus, with the paper's
+compressed-gradient path enabled, checkpointing, and resume.
+
+This is deliverable (b)'s end-to-end example: the full production substrate
+(config -> data pipeline -> sharded train step -> optimizer schedule ->
+checkpoint) driving a real model to a visibly lower loss.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(a CPU-friendly seq/batch; pass --full-size for the real 100M config)
+"""
+import argparse
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full-size", action="store_true",
+                    help="train the full 115M config (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    argv = ["--arch", "repro-100m", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--lr", "3e-3",
+            "--compression", "rq8", "--error-feedback",
+            "--ckpt-dir", args.ckpt_dir, "--log-every", "20"]
+    if not args.full_size:
+        argv.append("--reduced")
+    train_cli.main(argv)
+
+
+if __name__ == "__main__":
+    main()

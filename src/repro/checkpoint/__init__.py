@@ -1,0 +1,3 @@
+from repro.checkpoint.npz import latest_checkpoint, load_state, save_state
+
+__all__ = ["save_state", "load_state", "latest_checkpoint"]

@@ -1,0 +1,79 @@
+"""Checkpointing: flattened-path npz (orbax is not installed offline).
+
+Leaves are keyed by their slash-joined pytree path; restore rebuilds into a
+caller-provided template (so dtypes/sharding decisions stay with the
+trainer). On a real multi-host cluster each host would write its
+addressable shards under `<dir>/shard-<process_index>.npz`; here (single
+process) everything lands in one file. bf16 leaves are stored via a uint16
+view (npz has no native bfloat16).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_BF16_PREFIX = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_state(state: PyTree, directory: str, *, step: int = 0) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat: dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(state):
+        key = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            key = _BF16_PREFIX + key
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    fname = os.path.join(directory, f"step-{step:08d}.npz")
+    np.savez(fname, **flat)
+    return fname
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    files = sorted(f for f in os.listdir(directory)
+                   if f.startswith("step-") and f.endswith(".npz"))
+    return os.path.join(directory, files[-1]) if files else None
+
+
+def load_state(template: PyTree, fname: str) -> PyTree:
+    data = np.load(fname)
+    by_key: dict[str, np.ndarray] = {}
+    for key in data.files:
+        if key.startswith(_BF16_PREFIX):
+            by_key[key[len(_BF16_PREFIX):]] = \
+                data[key].view(jnp.bfloat16)
+        else:
+            by_key[key] = data[key]
+
+    def restore(path, leaf):
+        key = _path_str(path)
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_key[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {leaf.shape}")
+        return jnp.asarray(arr, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(restore, template)

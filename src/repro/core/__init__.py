@@ -1,0 +1,14 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+  compression    - Q(.) operators (Section 3.1.1) + wire-cost specs
+  communicators  - mb-SGD / CSGD / EC-SGD / ASGD / DSGD exchanges
+  parallel       - N-worker algorithm-tier trainer + quadratic testbed
+  eventsim       - Section 1.3 simplified communication model (discrete events)
+  theory         - Tables 1.1/1.2 closed forms + theorem learning rates
+  mixing         - gossip matrices W, spectral gap rho (Assumption 7)
+"""
+from repro.core import (communicators, compression, eventsim, mixing,
+                        parallel, theory)
+
+__all__ = ["communicators", "compression", "eventsim", "mixing", "parallel",
+           "theory"]

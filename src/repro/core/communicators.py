@@ -1,0 +1,229 @@
+"""The paper's system relaxations as composable gradient/model exchanges.
+
+Everything here runs inside a mapped context (``shard_map``/``vmap``/``pmap``)
+with a named worker axis — each call sees ONE worker's local tensors plus
+collectives over ``axis_name``. This is the faithful algorithm tier: per-worker
+compression randomness, per-worker error state, exact update rules.
+
+  MbSGDExchange      distributed baseline, Eq. (2.2)        pmean
+  CSGDPSExchange     Eq. (3.2)  Q(1/N sum Q(g_n))           multi-server PS form
+  CSGDRingExchange   Eq. (3.3)  Q(..Q(Q(g_1)+g_2)..+g_N)    ring AllReduce form
+  ECSGDExchange      Eqs. (3.8)-(3.12) DoubleSqueeze        two-sided EC
+  DelayedExchange    Assumption 5 bounded staleness (tau)   wraps any exchange
+  GossipMix          Eq. (5.2)  X <- (X - gamma G) W        ppermute ring / pmean
+
+The production (pjit) tier reuses the same compression registry but applies it
+to the device-owned gradient shard (multi-server-PS view: devices ARE the
+servers of their FSDP partition); see train/steps.py and DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compression
+
+PyTree = Any
+
+
+def _tree_map2(fn, a, b):
+    return jax.tree_util.tree_map(fn, a, b)
+
+
+def _worker_key(key: jax.Array, axis_name: str) -> jax.Array:
+    return jax.random.fold_in(key, lax.axis_index(axis_name))
+
+
+@dataclasses.dataclass(frozen=True)
+class MbSGDExchange:
+    """Synchronous data-parallel baseline: exact mean of worker gradients."""
+
+    name: str = "mbsgd"
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def __call__(self, grad: PyTree, state: PyTree, key: jax.Array, *,
+                 axis_name: str) -> tuple[PyTree, PyTree]:
+        return lax.pmean(grad, axis_name), state
+
+
+@dataclasses.dataclass(frozen=True)
+class CSGDPSExchange:
+    """CSGD, multi-server parameter-server form, Eq. (3.2).
+
+    Workers quantize independently (per-worker key); the server's outgoing
+    compression uses a key shared by all workers so the broadcast value is
+    identical everywhere (it is one physical message in the paper).
+    """
+
+    compressor: str = "rq8"
+    name: str = "csgd_ps"
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def __call__(self, grad, state, key, *, axis_name):
+        q_fn, _ = compression.get(self.compressor)
+        wkey = _worker_key(key, axis_name)
+        local_q = compression.tree_compress(grad, wkey, q_fn)
+        mean_q = lax.pmean(local_q, axis_name)
+        out = compression.tree_compress(mean_q, jax.random.fold_in(key, 0x5E4E4), q_fn)
+        return out, state
+
+
+@dataclasses.dataclass(frozen=True)
+class CSGDRingExchange:
+    """CSGD, ring-AllReduce form, Eq. (3.3).
+
+    The partial sum is re-compressed at every hop: after N-1 ppermute hops a
+    worker holds Q(..Q(Q(g_{i+1}) + g_{i+2}).. + g_i) — each worker ends with
+    a different nesting order, exactly like the per-partition chains of the
+    paper's Figure 3.3.
+    """
+
+    compressor: str = "rq8"
+    name: str = "csgd_ring"
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def __call__(self, grad, state, key, *, axis_name):
+        q_fn, _ = compression.get(self.compressor)
+        n = lax.axis_size(axis_name)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        wkey = _worker_key(key, axis_name)
+
+        acc = compression.tree_compress(grad, wkey, q_fn)
+
+        def hop(h, acc):
+            shifted = lax.ppermute(acc, axis_name, perm)
+            summed = _tree_map2(lambda a, g: a + g, shifted, grad)
+            hop_key = jax.random.fold_in(wkey, h)
+            return compression.tree_compress(summed, hop_key, q_fn)
+
+        acc = lax.fori_loop(1, n, hop, acc) if isinstance(n, int) and n > 1 else acc
+        return jax.tree_util.tree_map(lambda a: a / n, acc), state
+
+
+@dataclasses.dataclass(frozen=True)
+class ECSGDExchange:
+    """Error-compensated SGD / DoubleSqueeze, Eqs. (3.8)-(3.12).
+
+    Worker side:  v_n = g_n + delta_n ; send Q(v_n) ; delta_n = v_n - Q(v_n)
+    Server side:  v = mean_n Q(v_n) + delta ; bcast Q(v) ; delta = v - Q(v)
+    Works with ANY compressor, biased ones included (Section 3.3); tested via
+    Lemma 3.4.1's x_tilde recursion.
+    """
+
+    compressor: str = "sign1"
+    name: str = "ecsgd"
+
+    def init(self, params: PyTree) -> PyTree:
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"worker_err": z, "server_err": z}
+
+    def __call__(self, grad, state, key, *, axis_name):
+        q_fn, _ = compression.get(self.compressor)
+        wkey = _worker_key(key, axis_name)
+        # worker side (Eqs. 3.8-3.9)
+        v_n = _tree_map2(lambda g, d: g + d, grad, state["worker_err"])
+        q_n = compression.tree_compress(v_n, wkey, q_fn)
+        new_worker_err = _tree_map2(lambda v, q: v - q, v_n, q_n)
+        # server side (Eqs. 3.10-3.11); shared key -> identical on all workers
+        v = _tree_map2(lambda m, d: m + d, lax.pmean(q_n, axis_name),
+                       state["server_err"])
+        out = compression.tree_compress(v, jax.random.fold_in(key, 0x5E4E4), q_fn)
+        new_server_err = _tree_map2(lambda a, b: a - b, v, out)
+        return out, {"worker_err": new_worker_err, "server_err": new_server_err}
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedExchange:
+    """Bounded-staleness wrapper (ASGD, Section 4, Assumption 5).
+
+    Maintains a length-tau FIFO of exchanged gradients; the update returned at
+    step t is the one computed at step t - tau (the D(t) = t - tau worst case).
+    The first tau steps replay the oldest available gradient of the warmup
+    buffer (zeros), matching an idle-start cluster.
+    """
+
+    inner: Any = dataclasses.field(default_factory=MbSGDExchange)
+    tau: int = 4
+    name: str = "asgd"
+
+    def init(self, params: PyTree) -> PyTree:
+        buf = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((max(self.tau, 1),) + p.shape, p.dtype), params)
+        return {"inner": self.inner.init(params), "buffer": buf,
+                "head": jnp.zeros((), jnp.int32)}
+
+    def __call__(self, grad, state, key, *, axis_name):
+        fresh, inner_state = self.inner(grad, state["inner"], key,
+                                        axis_name=axis_name)
+        if self.tau <= 0:
+            return fresh, {"inner": inner_state, "buffer": state["buffer"],
+                           "head": state["head"]}
+        head = state["head"]
+        stale = jax.tree_util.tree_map(
+            lambda b: lax.dynamic_index_in_dim(b, head, 0, keepdims=False),
+            state["buffer"])
+        buf = _tree_map2(
+            lambda b, f: lax.dynamic_update_index_in_dim(b, f, head, 0),
+            state["buffer"], fresh)
+        return stale, {"inner": inner_state, "buffer": buf,
+                       "head": (head + 1) % self.tau}
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipMix:
+    """Decentralized model mixing, Eq. (5.2): X_{t+1} = (X_t - gamma G_t) W.
+
+    ``topology='ring'`` implements the paper's W2 (self + both neighbors, all
+    1/3) with two ppermutes — the O(1)-latency pattern of §5.1.
+    ``topology='full'`` is W1 = 11^T/N (reduces DSGD to mb-SGD, Thm 5.2.6
+    consistency check). TPU note: ppermute on a ring maps directly onto ICI
+    neighbor links; this is the decentralized pattern's native home.
+    """
+
+    topology: str = "ring"
+    name: str = "gossip"
+
+    def __call__(self, params: PyTree, *, axis_name: str) -> PyTree:
+        n = lax.axis_size(axis_name)
+        if self.topology == "full":
+            return lax.pmean(params, axis_name)
+        if self.topology != "ring":
+            raise ValueError(f"unknown topology {self.topology}")
+        right = [(i, (i + 1) % n) for i in range(n)]
+        left = [(i, (i - 1) % n) for i in range(n)]
+
+        def mix(x):
+            if n == 1:
+                return x
+            xr = lax.ppermute(x, axis_name, right)
+            xl = lax.ppermute(x, axis_name, left)
+            if n == 2:  # both neighbors are the same worker: 1/3 self + 2/3 nbr
+                return x / 3.0 + 2.0 * xr / 3.0
+            return (x + xr + xl) / 3.0
+
+        return jax.tree_util.tree_map(mix, params)
+
+
+EXCHANGES: dict[str, Callable[..., Any]] = {
+    "mbsgd": MbSGDExchange,
+    "csgd_ps": CSGDPSExchange,
+    "csgd_ring": CSGDRingExchange,
+    "ecsgd": ECSGDExchange,
+    "asgd": DelayedExchange,
+}
+
+
+def make_exchange(name: str, **kw) -> Any:
+    if name not in EXCHANGES:
+        raise KeyError(f"unknown exchange '{name}'; have {sorted(EXCHANGES)}")
+    return EXCHANGES[name](**kw)

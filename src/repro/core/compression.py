@@ -1,0 +1,160 @@
+"""Lossy compression operators Q(.) from Section 3 of the paper.
+
+Each operator acts on a single jnp array (communicators map them over pytrees).
+Unbiased operators satisfy E[Q(x)] = x (Assumption 3); every operator also
+reports its wire-format cost so the event simulator / roofline collective term
+can account for the actual bytes moved (compression changes *transfer time*,
+never latency — Figure 3.4/3.5).
+
+All randomness is explicit (jax.random keys) so runs are reproducible and the
+operators are usable inside jit/shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Static description of a compression operator.
+
+    name:        registry key.
+    unbiased:    whether E[Q(x)] = x (Assumption 3). CSGD requires True;
+                 EC-SGD works either way (Section 3.3).
+    bits_per_el: wire bits per *kept* element (payload).
+    density:     fraction of elements kept (1.0 for quantizers).
+    overhead_bytes: per-message header (scales, indices bookkeeping).
+    """
+
+    name: str
+    unbiased: bool
+    bits_per_el: float
+    density: float = 1.0
+    overhead_bytes: int = 8
+
+    def compressed_bytes(self, n_elements: int) -> float:
+        """Wire bytes for a message of n_elements (fp32 baseline = 4n)."""
+        payload = n_elements * self.density * self.bits_per_el / 8.0
+        if self.density < 1.0:
+            # sparse formats also ship indices (4 bytes each)
+            payload += n_elements * self.density * 4.0
+        return payload + self.overhead_bytes
+
+    def ratio(self, n_elements: int) -> float:
+        """Compression ratio eta < 1 relative to fp32 (paper's Table 1.1)."""
+        return self.compressed_bytes(n_elements) / (4.0 * n_elements)
+
+
+# ---------------------------------------------------------------------------
+# Operators. Each returns the *dequantized* array (same shape/dtype as input):
+# the algorithmic effect of Q is fully captured; the wire format is captured
+# by CompressionSpec. kernels/quant provides the packed TPU implementation.
+# ---------------------------------------------------------------------------
+
+
+def randomized_quantize(x: jnp.ndarray, key: jax.Array, *, bits: int = 8) -> jnp.ndarray:
+    """Unbiased randomized uniform quantization, Eq. (3.1) + Figure 3.1.
+
+    Knobs c_i are uniform on [min(x), max(x)]; each element rounds to the
+    bracketing knob with probability proportional to proximity, making
+    E[Q(x)] = x elementwise.
+    """
+    x32 = x.astype(jnp.float32)
+    lo = jnp.min(x32)
+    hi = jnp.max(x32)
+    levels = (1 << bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    norm = (x32 - lo) / scale               # in [0, levels]
+    floor = jnp.floor(norm)
+    frac = norm - floor
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    q = floor + (u < frac).astype(jnp.float32)   # stochastic round
+    q = jnp.clip(q, 0.0, levels)
+    return (q * scale + lo).astype(x.dtype)
+
+
+def randomized_sparsify(x: jnp.ndarray, key: jax.Array, *, p: float = 0.1) -> jnp.ndarray:
+    """Unbiased randomized sparsification (Wangni et al., 2018).
+
+    Keep each coordinate with probability p, rescale kept ones by 1/p.
+    """
+    mask = jax.random.bernoulli(key, p, x.shape)
+    return jnp.where(mask, x / p, jnp.zeros_like(x)).astype(x.dtype)
+
+
+def topk_sparsify(x: jnp.ndarray, key: Optional[jax.Array] = None, *, frac: float = 0.01) -> jnp.ndarray:
+    """Biased top-k (by magnitude) sparsification (Section 3.1.1 caveat 3)."""
+    del key
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, jnp.zeros_like(flat))
+    return kept.reshape(x.shape)
+
+
+def onebit_sign(x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Biased 1-bit quantization ||x||_1/d * sign(x) (Bernstein et al., 2018)."""
+    del key
+    x32 = x.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(x32))
+    return (scale * jnp.sign(x32)).astype(x.dtype)
+
+
+def clip_lowbits(x: jnp.ndarray, key: Optional[jax.Array] = None, *, keep_bits: int = 16) -> jnp.ndarray:
+    """Biased deterministic clipping: zero the low mantissa bits (Section 3.2).
+
+    keep_bits=16 reproduces fp32->bf16 truncation.
+    """
+    del key
+    x32 = x.astype(jnp.float32)
+    raw = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF) << jnp.uint32(32 - keep_bits)
+    return jax.lax.bitcast_convert_type(raw & mask, jnp.float32).astype(x.dtype)
+
+
+def identity(x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+    del key
+    return x
+
+
+# name -> (fn(x, key) -> x_hat, CompressionSpec)
+REGISTRY: dict[str, tuple[Callable, CompressionSpec]] = {
+    "none": (identity, CompressionSpec("none", True, 32.0, overhead_bytes=0)),
+    "rq8": (partial(randomized_quantize, bits=8), CompressionSpec("rq8", True, 8.0)),
+    "rq4": (partial(randomized_quantize, bits=4), CompressionSpec("rq4", True, 4.0)),
+    "rq2": (partial(randomized_quantize, bits=2), CompressionSpec("rq2", True, 2.0)),
+    "rand_sparse_10": (
+        partial(randomized_sparsify, p=0.1),
+        CompressionSpec("rand_sparse_10", True, 32.0, density=0.1),
+    ),
+    "topk_1": (
+        partial(topk_sparsify, frac=0.01),
+        CompressionSpec("topk_1", False, 32.0, density=0.01),
+    ),
+    "sign1": (onebit_sign, CompressionSpec("sign1", False, 1.0)),
+    "clip16": (clip_lowbits, CompressionSpec("clip16", False, 16.0)),
+}
+
+
+def get(name: str) -> tuple[Callable, CompressionSpec]:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown compression '{name}'; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def tree_compress(tree, key: jax.Array, fn: Callable) -> tuple:
+    """Apply Q leaf-wise with independent keys. Returns compressed tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [fn(leaf, k) for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_bytes(tree, spec: CompressionSpec) -> float:
+    """Total wire bytes for a pytree message under `spec`."""
+    return sum(spec.compressed_bytes(leaf.size) for leaf in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,241 @@
+"""Discrete-event simulator for the paper's simplified communication model (§1.3).
+
+Model (Figure 1.2):
+  * all workers hang off one "logical switch" of infinite bandwidth;
+  * every message pays a constant switch latency t_lat;
+  * a worker sends at most one message at a time, receives at most one at a
+    time, and may do one send and one receive concurrently;
+  * moving one unit (MB) takes t_tr seconds at the worker NIC.
+
+Semantics used here (documented in DESIGN.md — the paper's Figure 1.3 is not
+fully specified by its text): a message holds its sender's send-port AND its
+receiver's recv-port for the full (t_lat + size * t_tr) duration, and a message
+begins only when both ports are free. This reproduces every closed form the
+paper states:
+
+  single PS, N workers:            2 N (t_lat + t_tr)          (§1.3.2)
+  ring AllReduce, partitioned:     ~2 N t_lat + 2 t_tr         (§1.3.3)
+  ring AllReduce, unpartitioned:   2 N (t_lat + t_tr)          (§1.3.3 caveat)
+  multi-server PS:                 ~2 N t_lat + 2 t_tr         (§1.3.4)
+  decentralized (ring gossip):     2 t_lat + 2 t_tr            (§5.1)
+  K-times compression: divides every t_tr term by K, latency unchanged
+                                                       (Figures 3.4/3.5)
+
+Example 1.3.2's "14 vs 9 units" figure reads one unit differently than these
+semantics (we get 13 vs 8) but the *saving* — exactly the halved transfer
+time, latency untouched — matches; asserted in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Msg:
+    """A point-to-point message request."""
+
+    t_req: float          # earliest time the sender wants to start
+    src: int
+    dst: int
+    size: float           # in MB (or any unit consistent with t_tr)
+    tag: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Delivery:
+    t_start: float
+    t_end: float
+    src: int
+    dst: int
+    size: float
+    tag: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    deliveries: tuple
+    makespan: float           # last completion - 0
+    span: float               # last completion - first request
+
+    def end_of(self, tag: str) -> float:
+        return max(d.t_end for d in self.deliveries if d.tag == tag)
+
+
+def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
+    """Run the switch model over a set of message requests.
+
+    Messages become eligible at t_req (or when their FIFO predecessor on the
+    same (src,dst,tag-order) finished, whichever is later — we model simple
+    per-request eligibility). Eligible messages start as soon as both the
+    sender send-port and receiver recv-port are free; ties break by request
+    time then insertion order, which matches the paper's walk-throughs.
+    """
+    msgs = list(msgs)
+    n = 0
+    for m in msgs:
+        n = max(n, m.src + 1, m.dst + 1)
+    send_free = [0.0] * n
+    recv_free = [0.0] * n
+    deliveries: list[Delivery] = []
+    # Greedy event loop: repeatedly pick the eligible message that can start
+    # earliest (then FIFO). O(k^2) is fine for the sizes we simulate.
+    remaining = sorted((m.t_req, i, m) for i, m in enumerate(msgs))
+    done: list[bool] = [False] * len(remaining)
+    for _ in range(len(remaining)):
+        best = None
+        best_key = None
+        for idx, (t_req, seq, m) in enumerate(remaining):
+            if done[idx]:
+                continue
+            t0 = max(t_req, send_free[m.src], recv_free[m.dst])
+            key = (t0, t_req, seq)
+            if best_key is None or key < best_key:
+                best_key = key
+                best = idx
+        t_req, seq, m = remaining[best]
+        done[best] = True
+        t0 = max(t_req, send_free[m.src], recv_free[m.dst])
+        dur = t_lat + m.size * t_tr
+        t_end = t0 + dur
+        send_free[m.src] = t_end
+        recv_free[m.dst] = t_end
+        deliveries.append(Delivery(t0, t_end, m.src, m.dst, m.size, m.tag))
+    makespan = max(d.t_end for d in deliveries) if deliveries else 0.0
+    t_first = min(m.t_req for m in msgs) if msgs else 0.0
+    return SimResult(tuple(deliveries), makespan, makespan - t_first)
+
+
+# ---------------------------------------------------------------------------
+# Communication-pattern builders (the paper's §1.3 walk-throughs). All return
+# the message list for computing/broadcasting S = sum_i w_i of a `size`-MB
+# parameter vector across `n` workers.
+# ---------------------------------------------------------------------------
+
+
+def single_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
+                       compression: float = 1.0) -> float:
+    """Simulated PS makespan with the broadcast gated on aggregation."""
+    ps = n
+    s = size / compression
+    up = simulate([Msg(0.0, w, ps, s, "agg") for w in range(n)],
+                  t_lat=t_lat, t_tr=t_tr)
+    t_sum = up.makespan
+    down = simulate([Msg(t_sum, ps, w, s, "bc") for w in range(n)],
+                    t_lat=t_lat, t_tr=t_tr)
+    return down.makespan
+
+
+def ring_allreduce_msgs(n: int, size: float, *, partitioned: bool = True,
+                        compression: float = 1.0) -> list[Msg]:
+    """§1.3.3: reduce-scatter + all-gather on a logical ring.
+
+    partitioned=True: model split into n chunks (the paper's key design
+    choice); False reproduces the "why do we partition" strawman.
+    """
+    msgs: list[Msg] = []
+    if partitioned:
+        chunk = size / n / compression
+        rounds = 2 * (n - 1)
+        for r in range(rounds):
+            phase = "reduce" if r < n - 1 else "gather"
+            for w in range(n):
+                msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"{phase}{r}"))
+    else:
+        chunk = size / compression
+        # one token circles the ring twice (2(n-1) sequential hops); model as
+        # chained requests via tags — simulate() serializes on ports anyway
+        for r in range(2 * (n - 1)):
+            w = r % n
+            msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"hop{r}"))
+    return msgs
+
+
+def ring_allreduce_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
+                            partitioned: bool = True,
+                            compression: float = 1.0) -> float:
+    """Round-synchronous ring AllReduce makespan.
+
+    Each of the 2(n-1) rounds moves one chunk per worker concurrently
+    (every worker sends one + receives one, allowed by the model), so a round
+    costs t_lat + chunk * t_tr.
+    """
+    if partitioned:
+        chunk = size / n / compression
+        return 2 * (n - 1) * (t_lat + chunk * t_tr)
+    chunk = size / compression
+    return 2 * (n - 1) * (t_lat + chunk * t_tr)
+
+
+def multi_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
+                      compression: float = 1.0) -> float:
+    """§1.3.4: every worker hosts 1/n of the model; same cost as ring AR.
+
+    Phase 1: n-1 incoming shards per server, perfectly staggered (Example
+    1.3.4) -> (n-1)(t_lat + chunk t_tr); phase 2 symmetric.
+    """
+    chunk = size / n / compression
+    return 2 * (n - 1) * (t_lat + chunk * t_tr)
+
+
+def decentralized_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
+                           degree: int = 2, compression: float = 1.0) -> float:
+    """§5.1: each worker exchanges its FULL model with `degree` neighbors.
+
+    Sends serialize at each worker's send port -> degree * (t_lat + size t_tr),
+    = 2 t_lat + 2 t_tr for the ring (paper's closed form).
+    """
+    del n
+    return degree * (t_lat + (size / compression) * t_tr)
+
+
+def async_ps_timeline(n: int, *, t_compute: Sequence[float], t_lat: float,
+                      t_tr: float, size: float, horizon: float) -> list[tuple]:
+    """§4.1 single-server async PS timeline.
+
+    Each worker loops: pull model (t_lat + size*t_tr, serialized at PS send
+    port), compute (t_compute[w]), push gradient (serialized at PS recv port).
+    Returns a list of (worker, t_update_applied, staleness_in_updates) and
+    demonstrates Figure 4.2's behavior: no global barrier, staleness grows
+    with worker-speed spread.
+    """
+    import heapq
+
+    msg_cost = t_lat + size * t_tr
+    ps_send_free = 0.0
+    ps_recv_free = 0.0
+    version = 0
+    versions_at_pull = [0] * n
+    updates: list[tuple] = []   # (worker, t_applied, staleness)
+    # event queue: (time, seq, kind, worker); processed in global time order
+    # so PS port reservations are FIFO-by-request-time (no future booking).
+    q: list[tuple] = [(0.0, i, "pull", i) for i in range(n)]
+    heapq.heapify(q)
+    seq = n
+    while q:
+        t, _, kind, w = heapq.heappop(q)
+        if t > horizon:
+            continue
+        if kind == "pull":
+            t0 = max(t, ps_send_free)
+            ps_send_free = t0 + msg_cost
+            versions_at_pull[w] = version
+            heapq.heappush(q, (t0 + msg_cost + t_compute[w], seq, "push", w))
+        else:  # push
+            t0 = max(t, ps_recv_free)
+            ps_recv_free = t0 + msg_cost
+            t_applied = t0 + msg_cost
+            staleness = version - versions_at_pull[w]
+            version += 1
+            updates.append((w, t_applied, staleness))
+            heapq.heappush(q, (t_applied, seq, "pull", w))
+        seq += 1
+    return sorted(updates, key=lambda u: u[1])
+
+
+def sync_ps_throughput(n: int, *, t_compute_max: float, t_lat: float,
+                       t_tr: float, size: float) -> float:
+    """Updates/sec for the synchronous baseline (Figure 4.1): every round =
+    max compute + full PS exchange; n gradient updates land per round."""
+    round_time = t_compute_max + 2 * n * (t_lat + size * t_tr)
+    return n / round_time

@@ -1,0 +1,89 @@
+"""Gossip (confusion) matrices W for decentralized SGD (Section 5).
+
+Assumption 7 requires W symmetric, doubly stochastic, with spectral gap
+1 - rho > 0 where rho = max_{n>=2} |lambda_n(W)|. The paper's examples:
+  W1 = 11^T / N            (fully connected,  rho = 0)
+  W2 = ring, self+2 nbrs   (rho ~= 1 - 16 pi^2 / (3 N^2) for large N)
+  W3 = disconnected        (rho = 1, DSGD does NOT converge)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def fully_connected(n: int) -> np.ndarray:
+    return np.full((n, n), 1.0 / n)
+
+
+def ring(n: int) -> np.ndarray:
+    """Paper's W2: average of self + immediate left/right neighbors."""
+    w = np.zeros((n, n))
+    for i in range(n):
+        w[i, i] = 1.0 / 3.0
+        w[i, (i + 1) % n] = 1.0 / 3.0
+        w[i, (i - 1) % n] = 1.0 / 3.0
+    if n == 1:
+        w[0, 0] = 1.0
+    if n == 2:
+        # self + one neighbor twice -> 1/3 + 2/3
+        w = np.array([[1 / 3, 2 / 3], [2 / 3, 1 / 3]])
+    return w
+
+
+def torus_2d(rows: int, cols: int) -> np.ndarray:
+    """4-neighbor 2-D torus gossip (beyond-paper topology; deg(G) = 4)."""
+    n = rows * cols
+    w = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            nbrs = {
+                ((r + 1) % rows) * cols + c,
+                ((r - 1) % rows) * cols + c,
+                r * cols + (c + 1) % cols,
+                r * cols + (c - 1) % cols,
+            } - {i}
+            for j in nbrs:
+                w[i, j] = 1.0 / (len(nbrs) + 1)
+            w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def disconnected(n: int) -> np.ndarray:
+    """Paper's W3: block-diagonal, rho = 1, provably non-mixing."""
+    w = np.eye(n)
+    if n >= 3:
+        w[: n - 1, : n - 1] = fully_connected(n - 1)
+        w[n - 1, n - 1] = 1.0
+    return w
+
+
+def spectral_rho(w: np.ndarray) -> float:
+    """rho = second largest |eigenvalue| (Assumption 7)."""
+    eig = np.sort(np.abs(np.linalg.eigvalsh(w)))[::-1]
+    return float(eig[1]) if eig.shape[0] > 1 else 0.0
+
+
+def check_assumption7(w: np.ndarray, *, atol: float = 1e-8) -> None:
+    """Raise if W violates symmetry / double-stochasticity / spectral gap."""
+    if not np.allclose(w, w.T, atol=atol):
+        raise ValueError("W is not symmetric")
+    if not np.allclose(w.sum(axis=0), 1.0, atol=atol):
+        raise ValueError("W is not doubly stochastic (columns)")
+    if not np.allclose(w.sum(axis=1), 1.0, atol=atol):
+        raise ValueError("W is not doubly stochastic (rows)")
+    if (w < -atol).any():
+        raise ValueError("W has negative entries")
+    if spectral_rho(w) >= 1.0 - 1e-12:
+        raise ValueError("W has no spectral gap (rho = 1): network disconnected")
+
+
+def ring_rho_paper_estimate(n: int) -> float:
+    """Paper's closed-form estimate rho ~= 1 - 16 pi^2 / (3 N^2)."""
+    return 1.0 - 16.0 * np.pi**2 / (3.0 * n**2)
+
+
+def degree(w: np.ndarray) -> int:
+    """deg(G): max off-diagonal nonzeros per row (Table 1.1 comm cost)."""
+    off = (np.abs(w) > 1e-12).sum(axis=1) - 1
+    return int(off.max())

@@ -1,0 +1,229 @@
+"""N-worker data-parallel first-order training with swappable exchanges.
+
+This is the paper-faithful algorithm tier: every worker has its own gradient
+stream, compression randomness, error state and (for DSGD) model replica. The
+worker axis is a real named axis — `jax.vmap(..., axis_name=...)` on one
+device, or `shard_map` across host devices — so the very same communicator
+code runs in simulation and on a real mesh.
+
+Used by tests (convergence-rate claims), examples/quickstart.py, and
+benchmarks/table1_1.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.communicators import GossipMix, MbSGDExchange
+
+PyTree = Any
+AXIS = "workers"
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    losses: jnp.ndarray        # (steps,) f at the (averaged) iterate
+    grad_norms: jnp.ndarray    # (steps,) ||f'(x_bar)||^2 (the paper's metric)
+    params: PyTree             # final per-worker params, leading axis N
+    consensus: jnp.ndarray     # (steps,) mean ||x_n - x_bar||^2 (DSGD Lemma 5.2.4)
+
+
+def _broadcast(params: PyTree, n: int) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params)
+
+
+def run_distributed(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    full_loss_fn: Callable[[PyTree], jnp.ndarray],
+    full_grad_fn: Callable[[PyTree], PyTree],
+    params0: PyTree,
+    sample_batch: Callable[[jax.Array], Any],
+    *,
+    n_workers: int,
+    steps: int,
+    lr: float,
+    exchange: Any = None,
+    gossip: Optional[GossipMix] = None,
+    seed: int = 0,
+) -> RunResult:
+    """Run `steps` iterations of (C/EC/A/D-)SGD with `n_workers`.
+
+    loss_fn(params, batch): one worker's minibatch loss.
+    full_loss_fn / full_grad_fn: deterministic f and f' for metrics.
+    sample_batch(key): draws one worker-minibatch (workers get split keys).
+    exchange: gradient communicator (None + gossip => pure DSGD local step).
+    gossip: optional model-mixing operator applied after the SGD update.
+    """
+    exchange = exchange if exchange is not None else MbSGDExchange()
+    params_w = _broadcast(params0, n_workers)
+    ex_state_w = jax.vmap(exchange.init)(params_w)
+    root = jax.random.PRNGKey(seed)
+
+    grad_local = jax.grad(loss_fn)
+
+    def scan_body(carry, t):
+        params_w, ex_state_w = carry
+        step_key = jax.random.fold_in(root, t)
+        keys = jax.random.split(step_key, n_workers)
+        # exchanges consume the SAME base key on every worker for the shared
+        # (server/broadcast) compression; worker-local keys come from fold_in
+        # on axis_index inside the exchange. So pass the per-worker batch key
+        # for sampling but the shared step_key for the exchange.
+        def one(params, ex_state, bkey):
+            batch = sample_batch(bkey)
+            g = grad_local(params, batch)
+            upd, ex_state = exchange(g, ex_state, step_key, axis_name=AXIS)
+            new_params = jax.tree_util.tree_map(
+                lambda p, u: p - lr * u, params, upd)
+            if gossip is not None:
+                new_params = gossip(new_params, axis_name=AXIS)
+            return new_params, ex_state
+
+        params_w, ex_state_w = jax.vmap(one, axis_name=AXIS)(
+            params_w, ex_state_w, keys)
+        x_bar = jax.tree_util.tree_map(lambda p: p.mean(0), params_w)
+        loss = full_loss_fn(x_bar)
+        g_bar = full_grad_fn(x_bar)
+        gnorm = sum(jnp.sum(g**2) for g in jax.tree_util.tree_leaves(g_bar))
+        cons = sum(
+            jnp.sum((p - p.mean(0, keepdims=True)) ** 2) / p.shape[0]
+            for p in jax.tree_util.tree_leaves(params_w))
+        return (params_w, ex_state_w), (loss, gnorm, cons)
+
+    (params_w, _), (losses, gnorms, cons) = lax.scan(
+        scan_body, (params_w, ex_state_w), jnp.arange(steps))
+    return RunResult(losses, gnorms, params_w, cons)
+
+
+# ---------------------------------------------------------------------------
+# Canonical testbed: distributed least squares (the paper's §1.1.3 example,
+# F_m = 1/2 (a_m^T x - b_m)^2) with controllable inner variance sigma and
+# outer (across-worker) variance varsigma — the knobs of Assumptions 2 and 6.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Quadratic:
+    a: jnp.ndarray         # (M, d) design
+    b: jnp.ndarray         # (M,) targets
+    worker_slices: int     # workers partition rows (varsigma > 0) if > 1
+
+    @staticmethod
+    def make(key: jax.Array, *, m: int = 1024, d: int = 32,
+             noise: float = 0.1, heterogeneity: float = 0.0,
+             n_workers: int = 1) -> "Quadratic":
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        a = jax.random.normal(k1, (m, d)) / jnp.sqrt(d)
+        x_true = jax.random.normal(k2, (d,))
+        b = a @ x_true + noise * jax.random.normal(k3, (m,))
+        if heterogeneity > 0:
+            # shift each worker's targets -> nonzero outer variance varsigma
+            shifts = heterogeneity * jax.random.normal(k4, (n_workers,))
+            rows_per = m // n_workers
+            b = b + jnp.repeat(shifts, rows_per, total_repeat_length=m)
+        return Quadratic(a, b, n_workers)
+
+    def full_loss(self, x: jnp.ndarray) -> jnp.ndarray:
+        r = self.a @ x - self.b
+        return 0.5 * jnp.mean(r**2)
+
+    def full_grad(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.grad(self.full_loss)(x)
+
+    def lipschitz(self) -> float:
+        """L = lambda_max(A^T A / M)."""
+        h = (self.a.T @ self.a) / self.a.shape[0]
+        return float(jnp.linalg.eigvalsh(h)[-1])
+
+    def minimum(self) -> jnp.ndarray:
+        sol = jnp.linalg.lstsq(self.a, self.b)[0]
+        return self.full_loss(sol)
+
+    def loss_on(self, x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        r = self.a[idx] @ x - self.b[idx]
+        return 0.5 * jnp.mean(r**2)
+
+    def make_sampler(self, batch: int, *, worker_partition: bool = False,
+                     n_workers: int = 1) -> Callable[[jax.Array], jnp.ndarray]:
+        """Returns sample_batch(key) -> row indices.
+
+        worker_partition=True gives each worker a disjoint row range
+        (decentralized data, D_n of Eq. 3.7) keyed by axis_index.
+        """
+        m = self.a.shape[0]
+        if not worker_partition:
+            return lambda key: jax.random.randint(key, (batch,), 0, m)
+
+        rows_per = m // n_workers
+
+        def sampler(key):
+            w = lax.axis_index(AXIS)
+            lo = w * rows_per
+            return lo + jax.random.randint(key, (batch,), 0, rows_per)
+
+        return sampler
+
+
+def run_quadratic(method: str, *, n_workers: int = 8, steps: int = 300,
+                  lr: float = 0.1, batch: int = 4, seed: int = 0,
+                  heterogeneity: float = 0.0, exchange_kw: dict | None = None,
+                  gossip_topology: str | None = None) -> RunResult:
+    """One-call driver used by tests/benchmarks: method in
+    {gd, sgd, mbsgd, csgd_ps, csgd_ring, ecsgd, asgd, dsgd}."""
+    from repro.core import communicators as C
+
+    key = jax.random.PRNGKey(seed)
+    prob = Quadratic.make(key, n_workers=n_workers,
+                          heterogeneity=heterogeneity)
+    x0 = jnp.zeros(prob.a.shape[1])
+    exchange_kw = dict(exchange_kw or {})
+
+    gossip = None
+    if method == "gd":
+        exchange, n_workers, sampler = C.MbSGDExchange(), 1, (
+            lambda key: jnp.arange(prob.a.shape[0]))
+    elif method in ("sgd", "mbsgd"):
+        exchange = C.MbSGDExchange()
+        n_workers = 1 if method == "sgd" else n_workers
+        sampler = prob.make_sampler(batch)
+    elif method == "csgd_ps":
+        exchange = C.CSGDPSExchange(**exchange_kw)
+        sampler = prob.make_sampler(batch)
+    elif method == "csgd_ring":
+        exchange = C.CSGDRingExchange(**exchange_kw)
+        sampler = prob.make_sampler(batch)
+    elif method == "ecsgd":
+        exchange = C.ECSGDExchange(**exchange_kw)
+        sampler = prob.make_sampler(batch)
+    elif method == "asgd":
+        exchange = C.DelayedExchange(inner=C.MbSGDExchange(), **exchange_kw)
+        sampler = prob.make_sampler(batch)
+    elif method == "dsgd":
+        exchange = C.MbSGDExchange()
+
+        class _Local:
+            """DSGD does NOT all-reduce gradients: local step + gossip."""
+            name = "local"
+
+            def init(self, params):
+                return ()
+
+            def __call__(self, grad, state, key, *, axis_name):
+                return grad, state
+
+        exchange = _Local()
+        gossip = GossipMix(topology=gossip_topology or "ring")
+        sampler = prob.make_sampler(batch, worker_partition=True,
+                                    n_workers=n_workers)
+    else:
+        raise ValueError(f"unknown method {method}")
+
+    return run_distributed(
+        prob.loss_on, prob.full_loss, prob.full_grad, x0, sampler,
+        n_workers=n_workers, steps=steps, lr=lr, exchange=exchange,
+        gossip=gossip, seed=seed)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLM, make_batch_shapes,
+                                 synthetic_batch)
+
+__all__ = ["SyntheticLM", "make_batch_shapes", "synthetic_batch"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  quant       stochastic uniform quantization (Eq. 3.1) — the compression
+              operator on every CSGD/EC-SGD iteration's critical path
+  flash_attn  blockwise-softmax GQA attention (prefill/train hot spot)
+  wkv6        RWKV6 chunked linear-attention scan
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True on CPU), ref.py (pure-jnp oracle). Tests sweep
+shapes/dtypes and assert_allclose kernel vs oracle.
+"""

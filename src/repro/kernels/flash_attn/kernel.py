@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: blockwise-softmax (flash) GQA attention.
+
+TPU adaptation notes (DESIGN.md §4):
+  * grid = (B, Hq, nQ, nK) — the LAST axis is the reduction axis: TPU grids
+    execute sequentially, so the running max/denominator/accumulator live in
+    VMEM scratch carried across the k-block steps (revisiting pattern);
+  * BlockSpecs: q tile (1, 1, BQ, D), k/v tiles (1, 1, BK, D); the kv-head
+    index map folds GQA (kv_head = q_head // group) so no head replication
+    is materialized in HBM;
+  * BQ = BK = 128 keeps tiles MXU-aligned (128 lanes) and the working set
+    (q + k + v + acc + stats ~ 5 * 128 * D * 4B) far under VMEM;
+  * causal + sliding-window masking is computed from program ids; fully
+    masked k-blocks still execute (no early-exit on TPU grids) — skipping
+    them via a grid-shrink is a recorded §Perf candidate;
+  * online softmax keeps fp32 stats; output cast back to q.dtype.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int, softcap: float, n_k: int, s_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)           # (BK, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ()))) * scale    # (BQ, BK)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < s_valid                      # padded keys never attended
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                            # (BQ, 1)
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                    # (BQ, BK)
+    alpha = jnp.exp(m_prev - m_new)                # (BQ, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool, window: int,
+                         softcap: float, block_q: int, block_k: int,
+                         s_valid: int, interpret: bool) -> jnp.ndarray:
+    """q: (B,Hq,S,D); k,v: (B,Hkv,S,D) — layout chosen in ops.py.
+
+    s_valid: real (unpadded) sequence length; keys beyond it are masked.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    n_q = pl.cdiv(s, block_q)
+    n_k = pl.cdiv(s, block_k)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, softcap=softcap, n_k=n_k,
+        s_valid=s_valid)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, group=group:
+                         (b_, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, group=group:
+                         (b_, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

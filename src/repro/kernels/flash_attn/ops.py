@@ -1,0 +1,44 @@
+"""jit'd wrapper for the flash-attention kernel.
+
+Public layout matches the model code: q (B, S, Hq, D); k/v (B, S, Hkv, D).
+The wrapper transposes to (B, H, S, D) (head-major tiles so the kernel's
+last two dims are the MXU-aligned (S, D) plane), pads S to a block multiple,
+and picks block sizes; off-TPU it runs interpret=True.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import kernel
+
+DEFAULT_BLOCK = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = DEFAULT_BLOCK,
+                    block_k: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    b, s, hq, d = q.shape
+    block_q = min(block_q, max(8, 1 << (s - 1).bit_length()))
+    block_k = min(block_k, block_q)
+    pad = (-s) % max(block_q, block_k)
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = kernel.flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, s_valid=s, interpret=_interpret())
+    out = jnp.moveaxis(out, 1, 2)
+    return out[:, :s] if pad else out

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash-attention kernel: full-materialization
+grouped-query SDPA with causal / sliding-window masking and logit softcap.
+Delegates to repro.models.attention.sdpa_reference (one source of truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import make_mask, sdpa_reference
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B,S,Hq,D); k,v: (B,S,Hkv,D)."""
+    s = q.shape[1]
+    mask = make_mask(s, s, causal=causal, window=window)[None]
+    return sdpa_reference(q, k, v, mask, softcap=softcap)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused stochastic quantize-dequantize (Eq. 3.1).
+
+Layout/tiling rationale (TPU v5e):
+  * the array is viewed as (R, C) with C a multiple of 128 (lane width);
+    the wrapper pads/reshapes arbitrary tensors into this layout;
+  * grid over row-tiles; each step holds a (BLOCK_R, C) fp32 tile of x and
+    of the pre-drawn uniforms in VMEM (x + u + out = 3 tiles; BLOCK_R is
+    chosen in ops.py so 3 * BLOCK_R * C * 4B stays well under ~16 MB VMEM);
+  * (lo, scale) arrive as a (1, 2) SMEM operand (global-scale quantization —
+    min/max is a cheap jnp reduction outside the kernel);
+  * pure VPU elementwise work, no MXU; stochastic rounding compares the
+    uniform draw against the fractional part.
+
+Encode emits int8 codes (the wire format whose byte count feeds the
+roofline collective term); the fused qdq variant returns the dequantized
+values directly (what CSGD's update rule consumes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qdq_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
+    lo = params_ref[0, 0]
+    scale = params_ref[0, 1]
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    norm = (x - lo) / scale
+    floor = jnp.floor(norm)
+    frac = norm - floor
+    q = floor + (u < frac).astype(jnp.float32)
+    q = jnp.clip(q, 0.0, float(levels))
+    o_ref[...] = (q * scale + lo).astype(o_ref.dtype)
+
+
+def _encode_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
+    lo = params_ref[0, 0]
+    scale = params_ref[0, 1]
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    norm = (x - lo) / scale
+    floor = jnp.floor(norm)
+    frac = norm - floor
+    q = floor + (u < frac).astype(jnp.float32)
+    o_ref[...] = jnp.clip(q, 0.0, float(levels)).astype(jnp.uint8)
+
+
+def _decode_kernel(params_ref, c_ref, o_ref):
+    lo = params_ref[0, 0]
+    scale = params_ref[0, 1]
+    o_ref[...] = (c_ref[...].astype(jnp.float32) * scale + lo).astype(
+        o_ref.dtype)
+
+
+def qdq(x: jnp.ndarray, u: jnp.ndarray, params: jnp.ndarray, *, bits: int,
+        block_r: int, interpret: bool) -> jnp.ndarray:
+    """x, u: (R, C); params: (1, 2) [lo, scale]. Returns dequantized x."""
+    r, c = x.shape
+    kernel = functools.partial(_qdq_kernel, levels=(1 << bits) - 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(r, block_r),),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+    )(params, x, u)
+
+
+def encode(x: jnp.ndarray, u: jnp.ndarray, params: jnp.ndarray, *, bits: int,
+           block_r: int, interpret: bool) -> jnp.ndarray:
+    r, c = x.shape
+    kernel = functools.partial(_encode_kernel, levels=(1 << bits) - 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(r, block_r),),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.uint8),
+        interpret=interpret,
+    )(params, x, u)
+
+
+def decode(codes: jnp.ndarray, params: jnp.ndarray, *, out_dtype,
+           block_r: int, interpret: bool) -> jnp.ndarray:
+    r, c = codes.shape
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(pl.cdiv(r, block_r),),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=interpret,
+    )(params, codes)

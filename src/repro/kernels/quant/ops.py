@@ -1,0 +1,75 @@
+"""jit'd wrapper for the quantization kernel.
+
+Handles arbitrary shapes (pad + reshape to (R, C=512) lanes), draws the
+uniforms, computes global (lo, scale), picks BLOCK_R for the VMEM budget,
+and falls back to interpret=True off-TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import kernel, ref
+
+LANES = 512
+VMEM_BUDGET = 8 * 1024 * 1024   # conservative half of ~16MB usable
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _block_r(c: int) -> int:
+    # 3 fp32 tiles (x, u, out) resident
+    rows = VMEM_BUDGET // (3 * 4 * c)
+    rows = max(8, min(1024, rows))
+    return int(rows) & ~7 or 8   # multiple of 8 sublanes
+
+
+def _to_2d(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % LANES
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), pad
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_dequantize(x: jnp.ndarray, key: jax.Array, *,
+                        bits: int = 8) -> jnp.ndarray:
+    """Fused Q(x) with stochastic rounding; same statistics as
+    repro.core.compression.randomized_quantize."""
+    lo, scale = ref.quant_params(x, bits)
+    params = jnp.stack([lo, scale]).reshape(1, 2)
+    x2d, _ = _to_2d(x)
+    u = jax.random.uniform(key, x2d.shape, jnp.float32)
+    out = kernel.qdq(x2d, u, params, bits=bits,
+                     block_r=_block_r(x2d.shape[1]), interpret=_interpret())
+    return out.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def encode(x: jnp.ndarray, key: jax.Array, *, bits: int = 8):
+    """Returns (codes int8 (R,C), params (1,2), orig_size). Wire bytes =
+    codes.size * bits / 8 (+ 8B header) — fed to the roofline model."""
+    lo, scale = ref.quant_params(x, bits)
+    params = jnp.stack([lo, scale]).reshape(1, 2)
+    x2d, _ = _to_2d(x)
+    u = jax.random.uniform(key, x2d.shape, jnp.float32)
+    codes = kernel.encode(x2d, u, params, bits=bits,
+                          block_r=_block_r(x2d.shape[1]),
+                          interpret=_interpret())
+    return codes, params
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype"))
+def decode(codes: jnp.ndarray, params: jnp.ndarray, *, shape: tuple,
+           dtype=jnp.float32) -> jnp.ndarray:
+    out = kernel.decode(codes, params, out_dtype=dtype,
+                        block_r=_block_r(codes.shape[1]),
+                        interpret=_interpret())
+    size = 1
+    for d in shape:
+        size *= d
+    return out.reshape(-1)[:size].reshape(shape)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the stochastic uniform quantization kernel.
+
+Matches repro.core.compression.randomized_quantize bit-for-bit when given
+the same uniform draws; split into encode (codes) / decode so the packed
+wire format is visible to tests and to the roofline byte accounting.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_params(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Global (lo, scale) for b-bit uniform knobs over [min(x), max(x)]."""
+    x32 = x.astype(jnp.float32)
+    lo = jnp.min(x32)
+    hi = jnp.max(x32)
+    levels = (1 << bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    return lo, scale
+
+
+def encode(x: jnp.ndarray, u: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarray:
+    """Stochastic round to b-bit codes (stored in int8 for bits <= 8)."""
+    levels = (1 << bits) - 1
+    norm = (x.astype(jnp.float32) - lo) / scale
+    floor = jnp.floor(norm)
+    frac = norm - floor
+    q = floor + (u < frac).astype(jnp.float32)
+    return jnp.clip(q, 0.0, levels).astype(jnp.uint8 if bits <= 8 else jnp.int32)
+
+
+def decode(codes: jnp.ndarray, lo, scale) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale + lo
+
+
+def quantize_dequantize(x: jnp.ndarray, u: jnp.ndarray, *, bits: int) -> jnp.ndarray:
+    lo, scale = quant_params(x, bits)
+    return decode(encode(x, u, lo, scale, bits=bits), lo, scale).astype(x.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.wkv6 import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,30 @@
+"""Oracle for the WKV6 kernel = the model's own chunked jnp implementation
+(repro.models.rwkv.wkv_chunked), plus a step-by-step recurrence used to
+cross-check both."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv import wkv_chunked, wkv_recurrent_step
+
+
+def wkv6(r, k, v, log_w, u, *, state0=None, chunk: int = 64):
+    """r,k,v,log_w: (B,S,H,K); u: (H,K)."""
+    return wkv_chunked(r, k, v, log_w, u, chunk=chunk, state0=state0)
+
+
+def wkv6_stepwise(r, k, v, log_w, u, *, state0=None):
+    """Token-by-token recurrence (ground truth for both implementations)."""
+    b, s, h, dk = r.shape
+    state = (jnp.zeros((b, h, dk, dk), jnp.float32)
+             if state0 is None else state0)
+
+    def step(state, inputs):
+        r_, k_, v_, lw_ = inputs
+        out, state = wkv_recurrent_step(r_, k_, v_, lw_, u, state)
+        return state, out
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, log_w))
+    state, out = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(out, 0, 1), state

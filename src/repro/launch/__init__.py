@@ -1,0 +1,3 @@
+# Launcher package. NOTE: importing this package must never touch jax
+# device state — dryrun.py sets XLA_FLAGS before any jax import, and
+# mesh.py builds meshes only inside functions.

@@ -1,0 +1,235 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: `compiled.cost_analysis()` counts a `while` body ONCE, so a
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~n_layers.
+This module re-derives per-device, per-step totals by walking the HLO call
+graph:
+
+  * computations are parsed from the printed module, with a per-computation
+    symbol table (%name -> shape) so operand shapes resolve;
+  * `while` ops bind a body computation to a trip count. XLA's "wide" scan
+    loops pass the bound as an operand, so the count is recovered as the
+    MODE of the leading dims of the loop-carried tuple (scan xs/ys all have
+    leading dim == trips — stacked layer params dominate the tuple); a
+    constant found in the condition computation overrides when present;
+  * call/fusion/to_apply edges propagate multipliers; each op's cost is
+    weighted by the product of enclosing trip counts;
+  * FLOPs counted for dot ops: 2 * prod(result dims) * prod(lhs contracting
+    dims) — matmuls dominate transformer steps (elementwise ops are a
+    lower-order term, excluded and documented);
+  * collective bytes from result shapes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (`-start` counted,
+    `-done` skipped).
+
+Validated by tests: scanned vs unrolled lowerings of the same model agree,
+and the dot-FLOPs match the analytic 6ND estimate on a dense model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+                "f8e4m3": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(text: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(m.group(2)) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _leading_dims(text: str) -> list:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        if m.group(1) in _DTYPE_BYTES and m.group(2):
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            if dims:
+                out.append(dims[0])
+    return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list
+    symbols: dict          # %name -> type string
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        stripped = line.strip()
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and stripped:
+            cur.lines.append(stripped)
+            dm = _DEF_RE.match(stripped)
+            if dm:
+                cur.symbols[dm.group(1)] = dm.group(2)
+    return comps
+
+
+def _find_entry(comps: dict, hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    called = set()
+    for c in comps.values():
+        for ln in c.lines:
+            for cm in re.finditer(r"(?:body|condition|to_apply|calls)=%?"
+                                  r"([\w.\-]+)", ln):
+                called.add(cm.group(1))
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(while_line: str, cond: Optional[Computation]) -> int:
+    """Prefer a compare-constant in the condition; else the mode of leading
+    dims of the carried tuple (scan xs/ys share leading dim == trips)."""
+    if cond is not None:
+        consts = []
+        for ln in cond.lines:
+            if "compare" in ln or "constant" in ln:
+                consts += [int(v) for v in
+                           re.findall(r"constant\((\d+)\)", ln)]
+        consts = [c for c in consts if c > 1]
+        if consts:
+            return max(consts)
+    # result tuple is printed on the while line
+    head = while_line.split(" while(", 1)[0]
+    lead = [d for d in _leading_dims(head) if d > 1]
+    if lead:
+        return Counter(lead).most_common(1)[0][0]
+    return 1
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    loops: list = dataclasses.field(default_factory=list)
+    unknown_loops: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": dict(self.collective_breakdown),
+            "collective_counts": {k: int(v) for k, v in
+                                  self.collective_counts.items()},
+            "loops": self.loops,
+            "unknown_loops": self.unknown_loops,
+        }
+
+
+def _dot_flops_line(ln: str, symbols: dict) -> float:
+    m = re.match(r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\S+)\s+dot\(", ln)
+    if not m:
+        return 0.0
+    res = _SHAPE_RE.search(m.group(1))
+    if not res or res.group(1) not in _DTYPE_BYTES:
+        return 0.0
+    out_elems = _shape_elems(res.group(2))
+    args = re.search(r"dot\(\s*%?([\w.\-]+)", ln)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+    if not args or not cm:
+        return 0.0
+    lhs_type = symbols.get(args.group(1), "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 0.0
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    contract = 1
+    for idx in cm.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(hlo: str) -> HloCosts:
+    comps = parse_computations(hlo)
+    entry = _find_entry(comps, hlo)
+    costs = HloCosts()
+
+    def walk(name: str, mult: float, stack: tuple):
+        if name not in comps or name in stack:
+            return
+        comp = comps[name]
+        for ln in comp.lines:
+            if " while(" in ln:
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                cm_ = re.search(r"condition=%?([\w.\-]+)", ln)
+                cond = comps.get(cm_.group(1)) if cm_ else None
+                trips = _trip_count(ln, cond)
+                if trips == 1:
+                    costs.unknown_loops += 1
+                costs.loops.append({"body": bm.group(1) if bm else "?",
+                                    "trips": trips, "mult": mult})
+                if bm and bm.group(1) in comps:
+                    walk(bm.group(1), mult * trips, stack + (name,))
+                if cond is not None:
+                    walk(cond.name, mult * trips, stack + (name,))
+                continue
+            if " dot(" in ln:
+                costs.dot_flops += mult * _dot_flops_line(ln, comp.symbols)
+            hit_collective = False
+            for op in _COLLECTIVES:
+                if re.search(rf"\b{op}(-start)?\(", ln) and \
+                        f"{op}-done" not in ln:
+                    head = ln.split(f" {op}", 1)[0]
+                    nbytes = _type_bytes(head.split("=", 1)[-1])
+                    costs.collective_bytes += mult * nbytes
+                    costs.collective_breakdown[op] += mult * nbytes
+                    costs.collective_counts[op] += mult
+                    hit_collective = True
+                    break
+            if hit_collective:
+                continue
+            # nested computations (fusion bodies contain no collectives but
+            # can contain dots? fusions inline dots as 'dot' inside the
+            # fusion computation — traverse call edges)
+            for cm2 in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                walk(cm2.group(1), mult, stack + (name,))
+            fm = re.search(r"fusion\(", ln)
+            if fm:
+                km = re.search(r"calls=%?([\w.\-]+)", ln)
+                if km:
+                    walk(km.group(1), mult, stack + (name,))
+    walk(entry, 1.0, ())
+    return costs

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods, 256 chips/pod (16x16). Mesh axes:
+  single-pod:  (16, 16)    ('data', 'model')
+  multi-pod:   (2, 16, 16) ('pod', 'data', 'model')  — 512 chips
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing
+this module never initializes jax's device backend; the dry-run launcher
+sets --xla_force_host_platform_device_count=512 before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int | None = None, *, axes=("data",)):
+    """Small mesh over the real host devices (examples / integration tests)."""
+    n = n if n is not None else len(jax.devices())
+    import numpy as np
+    if len(axes) == 1:
+        return jax.make_mesh((n,), axes)
+    raise ValueError("host mesh supports a single axis")
+
+
+# Hardware constants for the roofline model (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per chip, ring neighbor)
+VMEM_BYTES = 16 * 1024 * 1024
+HBM_BYTES = 16 * 1024**3        # 16 GB per v5e chip

@@ -1,0 +1,7 @@
+"""Model zoo: composable layers + the 10 assigned architectures."""
+from repro.models import (attention, common, layers, mla, moe, rglru, rwkv,
+                          transformer)
+from repro.models.common import INPUT_SHAPES, InputShape, ModelConfig
+
+__all__ = ["attention", "common", "layers", "mla", "moe", "rglru", "rwkv",
+           "transformer", "ModelConfig", "InputShape", "INPUT_SHAPES"]

@@ -1,0 +1,292 @@
+"""GQA attention: training/prefill (full or local-windowed) + cached decode.
+
+The jnp path below is the reference implementation (and the oracle for the
+Pallas flash kernel in repro.kernels.flash_attn). `use_flash=True` routes
+prefill/train through the kernel.
+
+KV caches:
+  * full cache: (B, S_max, n_kv, hd) with a write cursor;
+  * sliding-window ring cache (Mistral-style) for long-context decode — the
+    sub-quadratic variant used by the `long_500k` configs (DESIGN.md §3).
+Both store post-RoPE keys, so decode never re-rotates history.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import ModelConfig
+
+NEG_INF = -2.0**30
+
+
+def attn_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": layers.dense_init(ks[0], cfg.d_model, cfg.q_dim,
+                               bias=cfg.qkv_bias, dtype=dtype),
+        "k": layers.dense_init(ks[1], cfg.d_model, cfg.kv_dim,
+                               bias=cfg.qkv_bias, dtype=dtype),
+        "v": layers.dense_init(ks[2], cfg.d_model, cfg.kv_dim,
+                               bias=cfg.qkv_bias, dtype=dtype),
+        "o": layers.dense_init(ks[3], cfg.q_dim, cfg.d_model,
+                               bias=cfg.out_bias, dtype=dtype),
+    }
+
+
+def _rotate(cfg: ModelConfig, x, positions):
+    if cfg.rope_variant == "rope":
+        return layers.apply_rope(x, positions, theta=cfg.rope_theta)
+    if cfg.rope_variant == "mrope":
+        return layers.apply_mrope(x, positions, theta=cfg.rope_theta,
+                                  sections=cfg.mrope_sections)
+    return x
+
+
+def sdpa_reference(q, k, v, mask, *, softcap: float = 0.0):
+    """Grouped-query scaled-dot-product attention, fp32 softmax.
+
+    mask: bool, broadcastable to (B, Sq, Sk); True = attend.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    logits = layers.softcap(logits, softcap)
+    m = jnp.broadcast_to(mask[:, None, None], logits.shape) if mask.ndim == 3 \
+        else mask
+    logits = jnp.where(m, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+CHUNKED_THRESHOLD = 4096   # switch to q-chunked attention at/above this S
+Q_CHUNK = 1024
+
+
+def chunked_sdpa(q, k, v, *, causal: bool, window: int, softcap: float,
+                 q_chunk: int = Q_CHUNK) -> jnp.ndarray:
+    """Memory-bounded attention: scan over query chunks (XLA-level flash
+    analog — exact softmax per chunk over all keys, O(q_chunk * S) logits).
+
+    Shapes: q (B,S,H,D) with FULL q heads; k/v (B,S,H,D) already repeated
+    to q-head count so the head dim shards cleanly over 'model' even for
+    ragged head counts (XLA pads 40 heads over 16 shards). Replaces the
+    full-S^2 reference at long sequence lengths, where the materialized
+    (B,H,S,S) logits were measured at 40 GiB/device and the ragged-head
+    partial-sum all-reduces at ~2 TB/device/step (EXPERIMENTS.md §Perf
+    iteration 2).
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    n_chunks = s // q_chunk
+    assert s % q_chunk == 0, f"seq {s} % q_chunk {q_chunk} != 0"
+    qt = jnp.moveaxis(q, 1, 2)                    # (B,H,S,D)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    qc = qt.reshape(b, h, n_chunks, q_chunk, d)
+    kj = jnp.arange(s)
+
+    def one_chunk(ci):
+        qb = qc[:, :, ci]                         # (B,H,C,D)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qb.astype(jnp.float32),
+                            kt.astype(jnp.float32)) * scale
+        logits = layers.softcap(logits, softcap)
+        qi = ci * q_chunk + jnp.arange(q_chunk)
+        m = jnp.ones((q_chunk, s), bool)
+        if causal:
+            m &= kj[None, :] <= qi[:, None]
+        if window > 0:
+            m &= kj[None, :] > qi[:, None] - window
+        logits = jnp.where(m[None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", w, vt.astype(jnp.float32))
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))   # (N,B,H,C,D)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, s, d)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)       # (B,S,H,D)
+
+
+def make_mask(sq: int, sk: int, *, causal: bool, window: int = 0,
+              q_offset: int = 0) -> jnp.ndarray:
+    """(sq, sk) bool mask; q position i attends to k position j."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, causal: bool = True,
+              window: int = 0, use_flash: bool = False):
+    """Train/prefill path. x: (B,S,d); positions: (B,S) or (B,3,S) mrope.
+
+    Backend selection: the Pallas flash kernel on TPU (use_flash), the
+    q-chunked exact path for long sequences (memory-bounded, shardable),
+    or the full-S^2 reference for short sequences (also the oracle).
+    """
+    b, s, _ = x.shape
+    q = layers.dense(p["q"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = layers.dense(p["k"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.dense(p["v"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = _rotate(cfg, q, positions)
+    k = _rotate(cfg, k, positions)
+    if use_flash:
+        from repro.kernels.flash_attn import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                        softcap=cfg.logit_softcap)
+    elif s >= CHUNKED_THRESHOLD and s % Q_CHUNK == 0:
+        from repro.dist.sharding import constrain_heads
+        group = cfg.n_heads // cfg.n_kv_heads
+        kf = jnp.repeat(k, group, axis=2)   # full q-head kv: clean sharding
+        vf = jnp.repeat(v, group, axis=2)
+        q, kf, vf = (constrain_heads(t) for t in (q, kf, vf))
+        out = chunked_sdpa(q, kf, vf, causal=causal, window=window,
+                           softcap=cfg.logit_softcap)
+    else:
+        mask = make_mask(s, s, causal=causal, window=window)[None]
+        out = sdpa_reference(q, k, v, mask, softcap=cfg.logit_softcap)
+    return layers.dense(p["o"], out.reshape(b, s, cfg.q_dim))
+
+
+def cross_attention(p, cfg: ModelConfig, x, memory_kv):
+    """Enc-dec cross attention; memory_kv = (k, v) precomputed from encoder."""
+    b, s, _ = x.shape
+    q = layers.dense(p["q"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k, v = memory_kv
+    mask = jnp.ones((1, s, k.shape[1]), bool)
+    out = sdpa_reference(q, k, v, mask, softcap=cfg.logit_softcap)
+    return layers.dense(p["o"], out.reshape(b, s, cfg.q_dim))
+
+
+def memory_kv(p, cfg: ModelConfig, memory):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    b, s, _ = memory.shape
+    k = layers.dense(p["k"], memory).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.dense(p["v"], memory).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# KV caches
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16,
+               quantize: bool = False):
+    """window > 0 -> ring buffer of `window` slots; else full seq_len.
+
+    quantize=True stores int8 K/V with a per-(slot, head) fp32 scale —
+    the paper's quantization idea (Section 3.1.1) applied to the serving
+    memory bottleneck: 2x smaller persistent KV state at <1% attention
+    error (EXPERIMENTS.md §Perf iteration 9).
+    """
+    slots = min(window, seq_len) if window > 0 else seq_len
+    shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        # absolute position currently held by each slot (-1 = empty)
+        "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
+        "cursor": jnp.zeros((), jnp.int32),   # next absolute position
+        "window": jnp.asarray(window if window > 0 else 0, jnp.int32),
+    }
+    if quantize:
+        cache["k"] = jnp.zeros(shape, jnp.int8)
+        cache["v"] = jnp.zeros(shape, jnp.int8)
+        cache["k_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    return cache
+
+
+def _quantize_kv(kv: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,1,H,D) -> int8 codes + per-(slot,head) scale (symmetric max-abs)."""
+    scale = jnp.max(jnp.abs(kv.astype(jnp.float32)), -1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(codes: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache):
+    """One-token decode. x: (B,1,d). Returns (out, new_cache)."""
+    b = x.shape[0]
+    pos = cache["cursor"]                                   # scalar abs pos
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope_variant == "mrope":
+        positions = layers.text_mrope_positions(positions)
+    q = layers.dense(p["q"], x).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = layers.dense(p["k"], x).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.dense(p["v"], x).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = _rotate(cfg, q, positions)
+    k = _rotate(cfg, k, positions)
+
+    slots = cache["k"].shape[1]
+    slot = jnp.where(cache["window"] > 0, pos % slots,
+                     jnp.minimum(pos, slots - 1)).astype(jnp.int32)
+    quantized = "k_scale" in cache
+    new_cache = dict(cache)
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = _write_slot(cache["k"], kq, slot)
+        cv = _write_slot(cache["v"], vq, slot)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, axis=1)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, axis=1)
+        k_eff = _dequantize_kv(ck, new_cache["k_scale"], q.dtype)
+        v_eff = _dequantize_kv(cv, new_cache["v_scale"], q.dtype)
+    else:
+        ck = _write_slot(cache["k"], k, slot)
+        cv = _write_slot(cache["v"], v, slot)
+        k_eff = ck.astype(q.dtype)
+        v_eff = cv.astype(q.dtype)
+    spos = cache["slot_pos"].at[:, slot].set(pos)
+
+    # valid slots: filled AND (no window OR within window of pos)
+    valid = spos >= 0
+    valid &= jnp.where(cache["window"] > 0, spos > pos - cache["window"], True)
+    mask = valid[:, None, :]                                # (B,1,slots)
+    out = sdpa_reference(q, k_eff, v_eff, mask, softcap=cfg.logit_softcap)
+    new_cache.update({"k": ck, "v": cv, "slot_pos": spos,
+                      "cursor": pos + 1})
+    return layers.dense(p["o"], out.reshape(b, 1, cfg.q_dim)), new_cache
+
+
+def _write_slot(buf, kv, slot):
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, kv.astype(buf.dtype), slot, axis=1)
+
+
+def prefill_cache(cfg: ModelConfig, cache, k, v, positions):
+    """Bulk-write prefill K/V (already rotated) into a fresh cache."""
+    s = k.shape[1]
+    slots = cache["k"].shape[1]
+    if s > slots:  # windowed cache: keep the tail
+        k, v = k[:, -slots:], v[:, -slots:]
+        positions = positions[:, -slots:]
+        s = slots
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                             k.astype(cache["k"].dtype), 0, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                             v.astype(cache["v"].dtype), 0, 1)
+    spos = cache["slot_pos"].at[:, :s].set(positions)
+    return {"k": ck, "v": cv, "slot_pos": spos,
+            "cursor": jnp.asarray(positions[0, -1] + 1, jnp.int32),
+            "window": cache["window"]}

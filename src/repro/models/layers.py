@@ -1,0 +1,129 @@
+"""Shared layer primitives (pure functions over param subtrees).
+
+Parameters are plain nested dicts of jnp arrays; every function takes its
+param subtree first. Initializers return (shapes-only) trees when given
+``abstract=True`` callers — abstract init is done via jax.eval_shape at the
+launcher level, so these stay ordinary.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: Optional[float] = None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, *, kind: str, eps: float):
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32**2, -1, keepdims=True) + eps)
+        return (x32 * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = x32 * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    ang = ang[..., None, :]                             # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, *, theta: float,
+                sections: Sequence[int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE [arXiv:2409.12191].
+
+    positions3: (..., 3, S) — temporal/height/width position ids. Frequency
+    slots are split into `sections` (per half-dim), each slot taking its
+    angle from the corresponding positional axis.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    # build a (..., S, D/2) angle tensor choosing the axis per section
+    sec_ids = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.array(sections), total_repeat_length=d // 2)
+    # positions3: (..., 3, S) -> (..., S, 3)
+    pos = jnp.moveaxis(positions3, -2, -1).astype(jnp.float32)
+    # angle for slot k = pos[..., sec_ids[k]] * freqs[k]
+    pos_per_slot = jnp.take(pos, sec_ids, axis=-1)     # (..., S, D/2)
+    ang = pos_per_slot * freqs                          # (..., S, D/2)
+    ang = ang[..., None, :]                             # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """For pure-text streams all three M-RoPE axes share the position id."""
+    return jnp.stack([positions, positions, positions], axis=-2)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated or plain)
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, glu: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if glu:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, *, act: str, glu: bool):
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    up = dense(p["up"], x)
+    h = a(dense(p["gate"], x)) * up if glu else a(up)
+    return dense(p["down"], h)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,151 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed to a shared latent c_kv of rank `kv_lora_rank`; queries
+split into a no-RoPE part (against up-projected keys) and a RoPE part
+(against a single shared rotary key). The decode cache stores ONLY
+(c_kv, k_rope) — the paper's KV-memory reduction — and decodes via the
+"absorbed" matmul trick (latent-space attention) so per-step FLOPs stay
+O(rank) instead of O(heads * head_dim).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import ModelConfig
+
+NEG_INF = -2.0**30
+
+
+def mla_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    m = cfg.mla
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "q_proj": layers.dense_init(ks[0], cfg.d_model, h * qk_dim,
+                                    dtype=dtype),
+        "kv_down": layers.dense_init(ks[1], cfg.d_model,
+                                     m.kv_lora_rank + m.qk_rope_head_dim,
+                                     dtype=dtype),
+        "kv_norm": layers.norm_init(m.kv_lora_rank, "rmsnorm", dtype),
+        "k_up": layers.dense_init(ks[2], m.kv_lora_rank,
+                                  h * m.qk_nope_head_dim, dtype=dtype),
+        "v_up": layers.dense_init(ks[3], m.kv_lora_rank,
+                                  h * m.v_head_dim, dtype=dtype),
+        "o": layers.dense_init(ks[4], h * m.v_head_dim, cfg.d_model,
+                               dtype=dtype),
+    }
+
+
+def _split_kv_down(cfg: ModelConfig, kvd):
+    m = cfg.mla
+    c_kv, k_rope = kvd[..., :m.kv_lora_rank], kvd[..., m.kv_lora_rank:]
+    return c_kv, k_rope
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, *, causal: bool = True):
+    """Train/prefill path. x: (B,S,d)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+
+    q = layers.dense(p["q_proj"], x).reshape(b, s, h, qk_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    kvd = layers.dense(p["kv_down"], x)
+    c_kv, k_rope = _split_kv_down(cfg, kvd)
+    c_kv = layers.apply_norm(p["kv_norm"], c_kv, kind="rmsnorm",
+                             eps=cfg.norm_eps)
+    k_rope = layers.apply_rope(k_rope[:, :, None], positions,
+                               theta=cfg.rope_theta)          # (B,S,1,Dr)
+    k_nope = layers.dense(p["k_up"], c_kv).reshape(b, s, h, m.qk_nope_head_dim)
+    v = layers.dense(p["v_up"], c_kv).reshape(b, s, h, m.v_head_dim)
+
+    scale = 1.0 / math.sqrt(qk_dim)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkxd->bhqk", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    out = out.reshape(b, s, h * m.v_head_dim).astype(x.dtype)
+    return layers.dense(p["o"], out)
+
+
+# --------------------------------------------------------------------------
+# Cached decode: latent-space ("absorbed") attention over (c_kv, k_rope)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16):
+    m = cfg.mla
+    slots = min(window, seq_len) if window > 0 else seq_len
+    return {
+        "c_kv": jnp.zeros((batch, slots, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, slots, m.qk_rope_head_dim), dtype),
+        "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
+        "cursor": jnp.zeros((), jnp.int32),
+        "window": jnp.asarray(window if window > 0 else 0, jnp.int32),
+    }
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache):
+    """One-token decode with the latent cache. x: (B,1,d)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    pos = cache["cursor"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    q = layers.dense(p["q_proj"], x).reshape(b, 1, h, qk_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    kvd = layers.dense(p["kv_down"], x)
+    c_new, kr_new = _split_kv_down(cfg, kvd)
+    c_new = layers.apply_norm(p["kv_norm"], c_new, kind="rmsnorm",
+                              eps=cfg.norm_eps)
+    kr_new = layers.apply_rope(kr_new[:, :, None], positions,
+                               theta=cfg.rope_theta)[:, :, 0]
+
+    slots = cache["c_kv"].shape[1]
+    slot = jnp.where(cache["window"] > 0, pos % slots,
+                     jnp.minimum(pos, slots - 1)).astype(jnp.int32)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), slot, axis=1)
+    spos = cache["slot_pos"].at[:, slot].set(pos)
+
+    # absorbed attention: project q_nope into latent space via k_up^T
+    w_kup = p["k_up"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_kup.astype(jnp.float32))             # (B,1,H,rank)
+    scale = 1.0 / math.sqrt(qk_dim)
+    logits = (jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    valid = spos >= 0
+    valid &= jnp.where(cache["window"] > 0, spos > pos - cache["window"], True)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, -1)
+    # attend in latent space, then up-project once per step
+    ctx_lat = jnp.einsum("bhqk,bkr->bqhr", w, c_kv.astype(jnp.float32))
+    w_vup = p["v_up"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, w_vup.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope, "slot_pos": spos,
+                 "cursor": pos + 1, "window": cache["window"]}
+    return layers.dense(p["o"], out), new_cache

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts layer (GShard/Mixtral-style grouped capacity dispatch).
+
+TPU-native design: tokens are split into GROUPS (one group per sequence for
+training/prefill, one group for a decode micro-batch); routing within a
+group is a dense one-hot dispatch einsum, so expert compute is a single
+batched matmul over the expert axis — shardable over the `model` mesh axis
+(expert-parallel / expert-ff-parallel) and partitionable over groups on the
+`data` axis. Grouping bounds the dispatch tensor at
+group_size^2 * top_k * capacity_factor elements per group (the classic
+GShard trick); dispatching over the flat global batch would be O(T^2) and
+was caught by the dry-run FLOPs audit (EXPERIMENTS.md §Perf).
+
+Router aux (load-balance) loss follows Shazeer/Fedus:
+E * sum_e fraction_tokens_e * mean_router_prob_e, averaged over groups.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import ModelConfig, MoEConfig
+
+MAX_GROUP = 4096
+
+
+def moe_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    mcfg = cfg.moe
+    ks = jax.random.split(key, 3 + mcfg.n_shared)
+    d, f, e = cfg.d_model, mcfg.d_ff_expert, mcfg.n_experts
+    scale = 1.0 / d**0.5
+    p = {
+        "router": layers.dense_init(ks[0], d, e, dtype=jnp.float32),
+        # fused expert banks: (E, d, f) x2 + (E, f, d)
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(jax.random.fold_in(ks[2], 1),
+                                     (e, f, d), jnp.float32)
+                   * (1.0 / f**0.5)).astype(dtype),
+    }
+    for i in range(mcfg.n_shared):
+        p[f"shared_{i}"] = layers.mlp_init(ks[3 + i], d, f, glu=True,
+                                           dtype=dtype)
+    return p
+
+
+def _group_shape(n_tokens: int) -> tuple[int, int]:
+    """(n_groups, group_size) with group_size <= MAX_GROUP dividing T."""
+    g = min(n_tokens, MAX_GROUP)
+    while n_tokens % g:
+        g -= 1
+    return n_tokens // g, g
+
+
+def _capacity(mcfg: MoEConfig, group_size: int) -> int:
+    cap = int(group_size * mcfg.top_k * mcfg.capacity_factor / mcfg.n_experts)
+    return max(1, min(group_size, cap))
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, act: str = "silu"):
+    """x: (B, S, d). Returns (out, aux_loss)."""
+    mcfg = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    n_groups, g = _group_shape(t)
+    cap = _capacity(mcfg, g)
+    e, k = mcfg.n_experts, mcfg.top_k
+    xg = x.reshape(n_groups, g, d)
+
+    logits = layers.dense(p["router"], xg.astype(jnp.float32))    # (G,g,E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                # (G,g,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)      # (G,g,k,E)
+    # position of each (token, choice) within its expert, choice-major
+    flat = onehot.reshape(n_groups, g * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        n_groups, g, k, e)
+    keep = onehot * (pos_in_expert < cap)
+    slot = (pos_in_expert * keep).astype(jnp.int32)
+
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = slot_oh.sum(2)                                      # (G,g,E,C)
+    combine = jnp.einsum("Gtk,GtkEC->GtEC", gate_vals, slot_oh)
+
+    xe = jnp.einsum("Gtd,GtEC->GECd", xg.astype(jnp.float32), dispatch)
+    xe = xe.astype(x.dtype)                                        # (G,E,C,d)
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    h = a(jnp.einsum("GECd,Edf->GECf", xe, p["w_gate"])) * \
+        jnp.einsum("GECd,Edf->GECf", xe, p["w_up"])
+    ye = jnp.einsum("GECf,Efd->GECd", h, p["w_down"])              # (G,E,C,d)
+    out = jnp.einsum("GECd,GtEC->Gtd", ye.astype(jnp.float32), combine)
+    out = out.reshape(b, s, d)
+
+    xt = x.reshape(t, d)
+    for i in range(mcfg.n_shared):
+        out = out + layers.mlp(p[f"shared_{i}"], xt, act=act,
+                               glu=True).astype(jnp.float32).reshape(b, s, d)
+
+    # load-balance auxiliary loss (mean over groups)
+    frac_tokens = keep.sum((1, 2)) / jnp.maximum(1.0, float(g))    # (G,E)
+    mean_prob = probs.mean(1)                                      # (G,E)
+    aux = mcfg.router_aux_weight * e * jnp.mean(
+        jnp.sum(frac_tokens * mean_prob, -1))
+    return out.astype(x.dtype), aux

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t)            recurrence gate
+    i_t = sigmoid(W_x x_t)            input gate
+    log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is elementwise (diagonal), so prefill/training uses
+`lax.associative_scan` — O(log S) depth, TPU-parallel — and decode carries a
+(B, width) state: O(1) memory, which is why recurrentgemma runs `long_500k`.
+Block layout (Griffin "recurrent block"): two branches — GeLU gate, and
+conv1d(width 4) -> RG-LRU — multiplied, then projected out.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import ModelConfig
+
+RG_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglu_width or cfg.d_model
+
+
+def rglru_block_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d, w = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_gate": layers.dense_init(ks[0], d, w, dtype=dtype),
+        "in_rec": layers.dense_init(ks[1], d, w, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": layers.dense_init(ks[3], w, w, dtype=dtype),
+        "gate_x": layers.dense_init(ks[4], w, w, dtype=dtype),
+        # Lambda param: softplus(lam) in ~U[...] so a^c in [0.9, 0.999]
+        "lam": jnp.linspace(0.3, 1.5, w).astype(dtype),
+        "out": layers.dense_init(ks[5], w, d, dtype=dtype),
+    }
+
+
+def _causal_conv(p, x, *, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x: (B,S,W); state: (B,conv_width-1,W)."""
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    out = sum(xx[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(cw))
+    return out + p["conv_b"], xx[:, -(cw - 1):]
+
+
+def _rglru_coeffs(p, x):
+    r = jax.nn.sigmoid(layers.dense(p["gate_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(p["gate_x"], x).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_scan(a, b, *, h0: Optional[jnp.ndarray] = None):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a,b: (B,S,W)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bv
+
+
+def rglru_block(p, cfg: ModelConfig, x, *, state=None):
+    """Full-sequence recurrent block. Returns (out, new_state)."""
+    gate = jax.nn.gelu(layers.dense(p["in_gate"], x))
+    rec_in = layers.dense(p["in_rec"], x)
+    conv_state = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    rec_in, new_conv = _causal_conv(p, rec_in, state=conv_state)
+    a, b = _rglru_coeffs(p, rec_in)
+    h = rglru_scan(a, b, h0=h0)
+    out = layers.dense(p["out"], (h.astype(x.dtype) * gate))
+    return out, {"conv": new_conv, "h": h[:, -1]}
+
+
+def rglru_block_decode(p, cfg: ModelConfig, x, state):
+    """One-token step. x: (B,1,d)."""
+    gate = jax.nn.gelu(layers.dense(p["in_gate"], x))
+    rec_in = layers.dense(p["in_rec"], x)
+    rec_in, new_conv = _causal_conv(p, rec_in, state=state["conv"])
+    a, b = _rglru_coeffs(p, rec_in)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = layers.dense(p["out"], (h[:, None].astype(x.dtype) * gate))
+    return out, {"conv": new_conv, "h": h}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    w = _width(cfg)
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}

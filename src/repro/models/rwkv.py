@@ -1,0 +1,224 @@
+"""RWKV-6 "Finch" time-mix and channel-mix blocks (arXiv:2404.05892).
+
+Attention-free: per-head matrix state S in R^{K x V} with DATA-DEPENDENT
+decay w_t (the v6 novelty) and a bonus u for the current token:
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(wd(x_t)))
+
+Training/prefill uses a chunked parallel form (intra-chunk (C,C) matmuls +
+inter-chunk state carry) — the same schedule the Pallas kernel
+(repro.kernels.wkv6) implements on TPU; this module is its jnp oracle.
+Decode carries (S, token-shift tail) as the recurrent cache: O(1) state,
+which is why rwkv6 runs `long_500k` natively.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import ModelConfig
+
+CHUNK = 64
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def time_mix_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    lora = max(32, d // 16)
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),      # token-shift mixes r,w,k,v,g
+        "r": layers.dense_init(ks[0], d, d, dtype=dtype),
+        "k": layers.dense_init(ks[1], d, d, dtype=dtype),
+        "v": layers.dense_init(ks[2], d, d, dtype=dtype),
+        "g": layers.dense_init(ks[3], d, d, dtype=dtype),
+        "o": layers.dense_init(ks[4], d, d, dtype=dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -6.0, dtype),
+        "wA": layers.dense_init(ks[5], d, lora, dtype=dtype),
+        "wB": (jax.random.normal(ks[6], (lora, d), jnp.float32)
+               * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[7], (h, hd), jnp.float32)
+              * 0.1).astype(dtype),
+        "ln_x": layers.norm_init(d, "layernorm", dtype),  # per-head groupnorm
+    }
+
+
+def channel_mix_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jnp.full((2, cfg.d_model), 0.5, dtype),
+        "k": layers.dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype=dtype),
+        "v": layers.dense_init(ks[1], cfg.d_ff, cfg.d_model, dtype=dtype),
+        "r": layers.dense_init(ks[2], cfg.d_model, cfg.d_model, dtype=dtype),
+    }
+
+
+def _token_shift(x, prev: Optional[jnp.ndarray]):
+    """x: (B,S,d). prev: (B,d) last token of previous segment (or None)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    prev = prev.astype(x.dtype)   # recurrent state may be carried in fp32
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, x_prev, mu):
+    return x * mu + x_prev * (1.0 - mu)
+
+
+def _rwkv_projections(p, cfg, x, x_prev):
+    """Compute r,k,v,g,log_w from token-shifted inputs."""
+    b, s, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    xr = _mix(x, x_prev, p["mu"][0])
+    xw = _mix(x, x_prev, p["mu"][1])
+    xk = _mix(x, x_prev, p["mu"][2])
+    xv = _mix(x, x_prev, p["mu"][3])
+    xg = _mix(x, x_prev, p["mu"][4])
+    r = layers.dense(p["r"], xr).reshape(b, s, h, hd)
+    k = layers.dense(p["k"], xk).reshape(b, s, h, hd)
+    v = layers.dense(p["v"], xv).reshape(b, s, h, hd)
+    g = jax.nn.silu(layers.dense(p["g"], xg))
+    # log decay in (-inf, 0): log w = -exp(w0 + lora(xw))
+    lw = -jnp.exp(p["w0"].astype(jnp.float32)
+                  + jnp.tanh(xw.astype(jnp.float32)
+                             @ p["wA"]["w"].astype(jnp.float32))
+                  @ p["wB"].astype(jnp.float32))
+    log_w = lw.reshape(b, s, h, hd)
+    return r, k, v, g, log_w
+
+
+def wkv_chunked(r, k, v, log_w, u, *, chunk: int = CHUNK,
+                state0: Optional[jnp.ndarray] = None):
+    """Chunked-parallel WKV6 scan (jnp oracle for the Pallas kernel).
+
+    r,k,v,log_w: (B,S,H,K) fp32; u: (H,K). Returns (out (B,S,H,K), state
+    (B,H,K,K)). K==V dims here (square state).
+    """
+    b, s, h, dk = r.shape
+    pad = (-s) % chunk
+    if pad:
+        # padded steps are identity on the state: k = 0, log_w = 0
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, v = jnp.pad(r, zeros), jnp.pad(v, zeros)
+        k, log_w = jnp.pad(k, zeros), jnp.pad(log_w, zeros)
+    s_pad = s + pad
+    nc = s_pad // chunk
+    rc = r.reshape(b, nc, chunk, h, dk)
+    s = s_pad
+    kc = k.reshape(b, nc, chunk, h, dk)
+    vc = v.reshape(b, nc, chunk, h, dk)
+    lwc = log_w.reshape(b, nc, chunk, h, dk)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def per_chunk(state, inputs):
+        rc_, kc_, vc_, lwc_ = inputs                 # (B,C,H,K) each
+        cum = jnp.cumsum(lwc_, axis=1)               # inclusive cum log decay
+        # inter-chunk: q_t attends to state with decay prod_{s<=t-1} w
+        decay_in = jnp.exp(cum - lwc_)               # prod up to t-1
+        q_in = rc_ * decay_in                        # (B,C,H,K)
+        out_inter = jnp.einsum("bchk,bhkv->bchv", q_in, state)
+        # intra-chunk pairwise: t attends s<t with decay cum_{t-1}-cum_s
+        qd = rc_ * jnp.exp(cum - lwc_)               # (B,C,H,K)
+        kd = kc_ * jnp.exp(-cum)                     # (B,C,H,K)
+        att = jnp.einsum("bthk,bshk->bhts", qd, kd)  # (B,H,C,C)
+        att = jnp.where(causal[None, None], att, 0.0)
+        out_intra = jnp.einsum("bhts,bshv->bthv", att, vc_)
+        # bonus (current token)
+        bonus = jnp.einsum("bchk,hk,bchk->bch", rc_, u, kc_)
+        out_bonus = bonus[..., None] * vc_
+        # state update: S' = diag(prod w) S + sum_s (prod_{r>s} w ⊙ k_s) v_s^T
+        total = cum[:, -1]                           # (B,H,K)
+        k_carry = kc_ * jnp.exp(total[:, None] - cum)
+        state = (jnp.exp(total)[..., None] * state
+                 + jnp.einsum("bshk,bshv->bhkv", k_carry, vc_))
+        return state, out_inter + out_intra + out_bonus
+
+    # scan over chunks
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, lwc))
+    state, out = jax.lax.scan(per_chunk, state0, inputs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, dk)
+    if pad:
+        out = out[:, :s - pad]
+    return out, state
+
+
+def wkv_recurrent_step(r, k, v, log_w, u, state):
+    """Single-token recurrence (decode). r,k,v,log_w: (B,H,K); state (B,H,K,K)."""
+    att = jnp.einsum("bhk,bhkv->bhv", r, state)
+    bonus = jnp.einsum("bhk,hk,bhk->bh", r, u, k)[..., None] * v
+    new_state = (jnp.exp(log_w)[..., None] * state
+                 + jnp.einsum("bhk,bhv->bhkv", k, v))
+    return att + bonus, new_state
+
+
+def time_mix(p, cfg: ModelConfig, x, *, state=None, use_kernel: bool = False):
+    """Full-sequence time-mix. state: optional dict(prev_x, wkv) for chunked
+    streaming; returns (out, new_state)."""
+    b, s, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    prev_x = None if state is None else state["prev_x"]
+    s0 = None if state is None else state["wkv"]
+    x_prev = _token_shift(x, prev_x)
+    r, k, v, g, log_w = _rwkv_projections(p, cfg, x, x_prev)
+    if use_kernel:
+        from repro.kernels.wkv6 import ops as wkv_ops
+        out, new_s = wkv_ops.wkv6(r.astype(jnp.float32),
+                                  k.astype(jnp.float32),
+                                  v.astype(jnp.float32), log_w,
+                                  p["u"].astype(jnp.float32), state0=s0)
+    else:
+        out, new_s = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), log_w,
+                                 p["u"].astype(jnp.float32), state0=s0)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = layers.apply_norm(p["ln_x"], out, kind="layernorm", eps=1e-5)
+    out = layers.dense(p["o"], out * g)
+    return out, {"prev_x": x[:, -1].astype(jnp.float32), "wkv": new_s}
+
+
+def time_mix_decode(p, cfg: ModelConfig, x, state):
+    """One-token decode. x: (B,1,d)."""
+    b, _, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    x_prev = state["prev_x"][:, None].astype(x.dtype)
+    r, k, v, g, log_w = _rwkv_projections(p, cfg, x, x_prev)
+    out, new_wkv = wkv_recurrent_step(
+        r[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), log_w[:, 0],
+        p["u"].astype(jnp.float32), state["wkv"])
+    out = out.reshape(b, 1, d).astype(x.dtype)
+    out = layers.apply_norm(p["ln_x"], out, kind="layernorm", eps=1e-5)
+    out = layers.dense(p["o"], out * g)
+    return out, {"prev_x": x[:, 0].astype(jnp.float32), "wkv": new_wkv}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    return {"prev_x": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32)}
+
+
+def channel_mix(p, cfg: ModelConfig, x, *, prev_x=None):
+    x_prev = _token_shift(x, prev_x)
+    xk = _mix(x, x_prev, p["mu"][0])
+    xr = _mix(x, x_prev, p["mu"][1])
+    kk = jnp.square(jax.nn.relu(layers.dense(p["k"], xk)))
+    out = jax.nn.sigmoid(layers.dense(p["r"], xr)) * layers.dense(p["v"], kk)
+    return out, x[:, -1].astype(jnp.float32)
+
+
+def channel_mix_decode(p, cfg: ModelConfig, x, prev_x):
+    out, new_prev = channel_mix(p, cfg, x, prev_x=prev_x)
+    return out, new_prev

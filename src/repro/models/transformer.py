@@ -1,0 +1,376 @@
+"""Model assembly: heterogeneous block stacks, enc-dec, caches, losses.
+
+One code path serves all 10 assigned architectures; `cfg.block_pattern`
+selects the mixer per layer:
+
+  attn        full-causal GQA (dense/moe/vlm families)
+  local_attn  sliding-window GQA (recurrentgemma; window = cfg.local_window)
+  mla         multi-head latent attention (deepseek-v2)
+  rwkv        RWKV6 time-mix (+ its own channel-mix FFN)
+  rglru       Griffin RG-LRU recurrent block
+
+FFN position holds a gated MLP, or the MoE layer when cfg.moe is set
+(except layers listed in dense_ffn_layers-style overrides — deepseek keeps
+layer 0 dense, handled in its config via `moe_skip_layers`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mla, moe, rglru, rwkv
+from repro.models.common import ModelConfig
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, kind: str, layer_idx: int, *,
+                cross: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p: dict = {}
+    if kind in ("attn", "local_attn"):
+        p["ln1"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mixer"] = attention.attn_init(ks[0], cfg, dtype=dtype)
+    elif kind == "mla":
+        p["ln1"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mixer"] = mla.mla_init(ks[0], cfg, dtype=dtype)
+    elif kind == "rwkv":
+        p["ln1"] = layers.norm_init(cfg.d_model, "layernorm", dtype)
+        p["mixer"] = rwkv.time_mix_init(ks[0], cfg, dtype=dtype)
+        p["ln2"] = layers.norm_init(cfg.d_model, "layernorm", dtype)
+        p["ffn"] = rwkv.channel_mix_init(ks[1], cfg, dtype=dtype)
+        return p
+    elif kind == "rglru":
+        p["ln1"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mixer"] = rglru.rglru_block_init(ks[0], cfg, dtype=dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if cross:
+        p["ln_cross"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attention.attn_init(ks[2], cfg, dtype=dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if cfg.moe is not None and not _moe_skipped(cfg, layer_idx):
+        p["ffn"] = moe.moe_init(ks[1], cfg, dtype=dtype)
+    else:
+        p["ffn"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                   glu=cfg.glu, dtype=dtype)
+    return p
+
+
+def _moe_skipped(cfg: ModelConfig, layer_idx: int) -> bool:
+    # DeepSeek-V2 keeps the first layer dense; encoded per-arch via arch_id.
+    return cfg.arch_id.startswith("deepseek") and layer_idx == 0
+
+
+def init(cfg: ModelConfig, key: jax.Array, *, dtype=jnp.float32) -> PyTree:
+    n_keys = cfg.n_layers + cfg.n_encoder_layers + 3
+    ks = jax.random.split(key, n_keys)
+    params: dict = {}
+    if cfg.frontend == "token":
+        params["embed"] = (jax.random.normal(
+            ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype)
+    else:
+        # frontend stub: inputs arrive as embeddings; still need the LM head
+        params["embed"] = (jax.random.normal(
+            ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype)
+    params["final_norm"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(ks[1], cfg.d_model, cfg.vocab,
+                                              dtype=dtype)
+    params["layers"] = [
+        _block_init(ks[3 + i], cfg, kind, i, cross=cfg.is_encdec, dtype=dtype)
+        for i, kind in enumerate(cfg.block_pattern)]
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(ks[2], cfg.n_encoder_layers + 1)
+        params["encoder"] = {
+            "layers": [_block_init(enc_keys[i], cfg, "attn", i, dtype=dtype)
+                       for i in range(cfg.n_encoder_layers)],
+            "final_norm": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _norm(cfg, p, x):
+    return layers.apply_norm(p, x, kind=cfg.norm, eps=cfg.norm_eps)
+
+
+def _positions(cfg: ModelConfig, b: int, s: int, batch) -> jnp.ndarray:
+    if "positions3" in batch:
+        return batch["positions3"]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope_variant == "mrope":
+        return layers.text_mrope_positions(pos)
+    return pos
+
+
+def _ffn_apply(p, cfg: ModelConfig, x, layer_idx: int):
+    if cfg.moe is not None and not _moe_skipped(cfg, layer_idx) \
+            and "router" in p:
+        return moe.moe_apply(p, cfg, x, act=cfg.act)
+    return layers.mlp(p, x, act=cfg.act, glu=cfg.glu), 0.0
+
+
+def _block_apply(p, cfg: ModelConfig, kind: str, layer_idx: int, x,
+                 positions, *, memory_kv=None, use_flash: bool = False):
+    """Returns (x, aux)."""
+    aux = 0.0
+    if kind == "rwkv":
+        mix_out, _ = rwkv.time_mix(p["mixer"], cfg, _norm(cfg, p["ln1"], x),
+                                   use_kernel=False)
+        x = x + mix_out
+        ffn_out, _ = rwkv.channel_mix(p["ffn"], cfg, _norm(cfg, p["ln2"], x))
+        return x + ffn_out, aux
+
+    h = _norm(cfg, p["ln1"], x)
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        mixer_out = attention.attention(p["mixer"], cfg, h, positions,
+                                        causal=True, window=window,
+                                        use_flash=use_flash)
+    elif kind == "mla":
+        mixer_out = mla.mla_attention(p["mixer"], cfg, h, positions)
+    elif kind == "rglru":
+        mixer_out, _ = rglru.rglru_block(p["mixer"], cfg, h)
+    else:
+        raise ValueError(kind)
+
+    if cfg.parallel_block:
+        ffn_out, aux = _ffn_apply(p["ffn"], cfg, h, layer_idx)
+        return x + mixer_out + ffn_out, aux
+
+    x = x + mixer_out
+    if memory_kv is not None:
+        hc = _norm(cfg, p["ln_cross"], x)
+        x = x + attention.cross_attention(p["cross"], cfg, hc, memory_kv)
+    h2 = _norm(cfg, p["ln2"], x)
+    ffn_out, aux = _ffn_apply(p["ffn"], cfg, h2, layer_idx)
+    return x + ffn_out, aux
+
+
+def embed_inputs(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    from repro.dist.sharding import constrain_act
+    if cfg.frontend == "token" or "tokens" in batch:
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeddings"]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(x.dtype)
+    # pin batch sharding: stops XLA propagating the embedding table's FSDP
+    # layout into token-replicated activations (see dist/sharding.py)
+    return constrain_act(x)
+
+
+def encode(params, cfg: ModelConfig, src_embeddings) -> jnp.ndarray:
+    """Bidirectional encoder over frontend-stub embeddings (audio family)."""
+    enc = params["encoder"]
+    b, s, _ = src_embeddings.shape
+    x = src_embeddings
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    for i, p in enumerate(enc["layers"]):
+        h = _norm(cfg, p["ln1"], x)
+        attn_out = attention.attention(p["mixer"], cfg, h, pos, causal=False)
+        x = x + attn_out
+        h2 = _norm(cfg, p["ln2"], x)
+        ffn_out, _ = _ffn_apply(p["ffn"], cfg, h2, i)
+        x = x + ffn_out
+    return _norm(cfg, enc["final_norm"], x)
+
+
+def apply(params, cfg: ModelConfig, batch, *, use_flash: bool = False,
+          remat: bool = False):
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss scalar).
+
+    remat=True checkpoints each block (activation recomputation) — the
+    standard memory/compute trade for the big train configs; its effect is
+    visible in the dry-run cost_analysis as HLO_FLOPs > MODEL_FLOPS.
+    """
+    x = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = _positions(cfg, b, s, batch)
+
+    memory_kvs = [None] * cfg.n_layers
+    if cfg.is_encdec:
+        memory = encode(params, cfg, batch["src_embeddings"])
+        memory_kvs = [attention.memory_kv(p["cross"], cfg, memory)
+                      for p in params["layers"]]
+
+    aux_total = 0.0
+    for i, (p, kind) in enumerate(zip(params["layers"], cfg.block_pattern)):
+        def block(p_, x_, positions_, mkv_, kind=kind, i=i):
+            return _block_apply(p_, cfg, kind, i, x_, positions_,
+                                memory_kv=mkv_, use_flash=use_flash)
+
+        if remat:
+            block = jax.checkpoint(block)
+        x, aux = block(p, x, positions, memory_kvs[i])
+        aux_total = aux_total + aux
+
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _lm_head(params, cfg, x)
+    return logits, aux_total
+
+
+def _lm_head(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return layers.dense(params["lm_head"], x)
+
+
+def sharded_cross_entropy(logits, labels, *, softcap: float = 0.0):
+    """CE that stays partitionable when the vocab dim is 'model'-sharded.
+
+    `take_along_axis` is a gather along vocab, which forces XLA to
+    all-gather the full (B,S,V) logits (measured at ~1.2 TB/device/step for
+    a 152k vocab at train_4k — EXPERIMENTS.md §Perf iteration 1). The
+    max / sum-exp / one-hot-dot formulation keeps every vocab reduction a
+    tiny (B,S)-shaped collective instead.
+    """
+    logits = layers.softcap(logits.astype(jnp.float32), softcap)
+    m = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), -1))
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    label_logit = jnp.sum(logits * onehot, -1)
+    nll = lse - label_logit
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_flash: bool = False,
+            remat: bool = False):
+    logits, aux = apply(params, cfg, batch, use_flash=use_flash, remat=remat)
+    ce = sharded_cross_entropy(logits, batch["labels"],
+                               softcap=cfg.logit_softcap)
+    return ce + aux
+
+
+# --------------------------------------------------------------------------
+# Decode (serving): per-layer recurrent/KV state, one token per step
+# --------------------------------------------------------------------------
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int, *,
+                      window: int = 0, dtype=jnp.bfloat16,
+                      memory: Optional[jnp.ndarray] = None,
+                      quantize_kv: bool = False) -> PyTree:
+    """`window` > 0 selects the sliding-window KV cache for attn blocks
+    (long_500k configs); local_attn always uses cfg.local_window.
+    quantize_kv stores int8 K/V (+fp32 scales): 2x smaller persistent
+    serving state."""
+    state: list = []
+    for kind in cfg.block_pattern:
+        if kind == "attn":
+            state.append(attention.init_cache(cfg, batch, seq_len,
+                                              window=window, dtype=dtype,
+                                              quantize=quantize_kv))
+        elif kind == "local_attn":
+            state.append(attention.init_cache(cfg, batch, seq_len,
+                                              window=cfg.local_window,
+                                              dtype=dtype,
+                                              quantize=quantize_kv))
+        elif kind == "mla":
+            state.append(mla.init_cache(cfg, batch, seq_len, window=window,
+                                        dtype=dtype))
+        elif kind == "rwkv":
+            st = rwkv.init_state(cfg, batch)
+            st["prev_x_ffn"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+            state.append(st)
+        elif kind == "rglru":
+            state.append(rglru.init_state(cfg, batch, dtype=dtype))
+    out = {"layers": state}
+    if cfg.is_encdec:
+        if memory is None:
+            raise ValueError("enc-dec decode needs encoder memory")
+        out["memory_kv"] = [attention.memory_kv(p["cross"], cfg, memory)
+                            for p in params["layers"]]
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, inputs, state) -> tuple:
+    """One token for the whole stack.
+
+    inputs: {"tokens": (B,1)} or {"embeddings": (B,1,d)}.
+    Returns (logits (B,1,V), new_state).
+    """
+    x = embed_inputs(params, cfg, inputs)
+    new_layers = []
+    for i, (p, kind) in enumerate(zip(params["layers"], cfg.block_pattern)):
+        st = state["layers"][i]
+        if kind in ("attn", "local_attn"):
+            h = _norm(cfg, p["ln1"], x)
+            mix, st = attention.decode_attention(p["mixer"], cfg, h, st)
+        elif kind == "mla":
+            h = _norm(cfg, p["ln1"], x)
+            mix, st = mla.decode_attention(p["mixer"], cfg, h, st)
+        elif kind == "rglru":
+            h = _norm(cfg, p["ln1"], x)
+            mix, st = rglru.rglru_block_decode(p["mixer"], cfg, h, st)
+        elif kind == "rwkv":
+            h = _norm(cfg, p["ln1"], x)
+            tm_state = {"prev_x": st["prev_x"], "wkv": st["wkv"]}
+            mix, tm_state = rwkv.time_mix_decode(p["mixer"], cfg, h, tm_state)
+            x = x + mix
+            h2 = _norm(cfg, p["ln2"], x)
+            ffn_out, new_prev = rwkv.channel_mix_decode(
+                p["ffn"], cfg, h2, st["prev_x_ffn"])
+            x = x + ffn_out
+            st = {"prev_x": tm_state["prev_x"], "wkv": tm_state["wkv"],
+                  "prev_x_ffn": new_prev}
+            new_layers.append(st)
+            continue
+        else:
+            raise ValueError(kind)
+
+        if cfg.parallel_block:
+            ffn_out, _ = _ffn_apply(p["ffn"], cfg, h, i)
+            x = x + mix + ffn_out
+        else:
+            x = x + mix
+            if cfg.is_encdec:
+                hc = _norm(cfg, p["ln_cross"], x)
+                x = x + attention.cross_attention(p["cross"], cfg, hc,
+                                                  state["memory_kv"][i])
+            h2 = _norm(cfg, p["ln2"], x)
+            ffn_out, _ = _ffn_apply(p["ffn"], cfg, h2, i)
+            x = x + ffn_out
+        new_layers.append(st)
+
+    x = _norm(cfg, params["final_norm"], x)
+    logits = _lm_head(params, cfg, x)
+    new_state = dict(state)
+    new_state["layers"] = new_layers
+    return logits, new_state
+
+
+# --------------------------------------------------------------------------
+# Parameter counting (roofline MODEL_FLOPS = 6 N D uses these)
+# --------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig, *, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(
+        lambda k: init(cfg, k), jax.random.PRNGKey(0))
+    total = sum(int(jnp.prod(jnp.array(l.shape)))
+                for l in jax.tree_util.tree_leaves(shapes))
+    if not active_only or cfg.moe is None:
+        return total
+    # subtract inactive routed-expert params
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                       if not _moe_skipped(cfg, i))
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive

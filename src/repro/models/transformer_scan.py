@@ -1,0 +1,326 @@
+"""Scan-over-layers model assembly (production path).
+
+Compiling an unrolled 80-layer graph makes XLA's SPMD partitioner the
+bottleneck (minutes -> tens of minutes per dry-run combo); `lax.scan` over
+stacked per-layer params compiles the block body once — the standard
+production technique (MaxText et al.). This module mirrors
+repro.models.transformer (same block primitives, same math) with stacked
+parameters; tests assert scanned == unrolled on reduced configs.
+
+Layout: the block pattern is split into
+    prefix  (unrolled; e.g. deepseek's dense-FFN layer 0)
+  + unit * n_rep  (scanned; unit = minimal repeating cycle, e.g.
+                   recurrentgemma's (rglru, rglru, local_attn))
+  + suffix (unrolled remainder; e.g. recurrentgemma's trailing 2 layers)
+
+Param tree: {embed, final_norm, lm_head?, prefix_layers: [block...],
+             scan_blocks: [stacked-block per unit position],
+             suffix_layers: [block...], encoder?: {scan_blocks, final_norm}}
+Stacked leaves carry a leading n_rep dim; sharding rules replicate that dim
+(dist/sharding.py strips it).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mla, moe, rglru, rwkv
+from repro.models.common import ModelConfig
+from repro.models.transformer import (_block_apply, _block_init, _ffn_apply,
+                                      _lm_head, _moe_skipped, _norm,
+                                      _positions, embed_inputs)
+
+PyTree = Any
+
+
+def pattern_segments(cfg: ModelConfig):
+    """-> (prefix_kinds, unit_kinds, n_rep, suffix_kinds)."""
+    pattern = tuple(cfg.block_pattern)
+    start = 1 if (cfg.moe is not None and _moe_skipped(cfg, 0)) else 0
+    rest = pattern[start:]
+    unit, n_rep = rest[:1] or ("attn",), 0
+    for u in (1, 2, 3, 4, 6):
+        if not rest or len(rest) < u:
+            break
+        reps = len(rest) // u
+        if reps >= 1 and all(rest[i] == rest[i % u] for i in range(reps * u)):
+            unit, n_rep = rest[:u], reps
+            break
+    suffix = rest[n_rep * len(unit):]
+    return pattern[:start], unit, n_rep, suffix
+
+
+def init(cfg: ModelConfig, key: jax.Array, *, dtype=jnp.float32) -> PyTree:
+    prefix, unit, n_rep, suffix = pattern_segments(cfg)
+    ks = jax.random.split(key, 8)
+    params: dict = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(ks[1], cfg.d_model, cfg.vocab,
+                                              dtype=dtype)
+    params["prefix_layers"] = [
+        _block_init(jax.random.fold_in(ks[2], i), cfg, kind, i,
+                    cross=cfg.is_encdec, dtype=dtype)
+        for i, kind in enumerate(prefix)]
+    params["scan_blocks"] = []
+    for j, kind in enumerate(unit):
+        if n_rep == 0:
+            continue
+        keys = jax.random.split(jax.random.fold_in(ks[3], j), n_rep)
+        stacked = jax.vmap(
+            lambda k: _block_init(k, cfg, kind, len(prefix) + j,
+                                  cross=cfg.is_encdec, dtype=dtype))(keys)
+        params["scan_blocks"].append(stacked)
+    off = len(prefix) + n_rep * len(unit)
+    params["suffix_layers"] = [
+        _block_init(jax.random.fold_in(ks[4], i), cfg, kind, off + i,
+                    cross=cfg.is_encdec, dtype=dtype)
+        for i, kind in enumerate(suffix)]
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(ks[5], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "scan_blocks": jax.vmap(
+                lambda k: _block_init(k, cfg, "attn", 1, dtype=dtype))(
+                    enc_keys),
+            "final_norm": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def encode(params, cfg: ModelConfig, src_embeddings, *, remat: bool = False):
+    enc = params["encoder"]
+    b, s, _ = src_embeddings.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, p):
+        h = _norm(cfg, p["ln1"], x)
+        x = x + attention.attention(p["mixer"], cfg, h, pos, causal=False)
+        h2 = _norm(cfg, p["ln2"], x)
+        ffn_out, _ = _ffn_apply(p["ffn"], cfg, h2, 1)
+        return x + ffn_out, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, src_embeddings, enc["scan_blocks"])
+    return _norm(cfg, enc["final_norm"], x)
+
+
+def apply(params, cfg: ModelConfig, batch, *, use_flash: bool = False,
+          remat: bool = False, logits_positions: str = "all",
+          remat_policy: str = "full"):
+    """logits_positions='last' unembeds only the final position — the
+    serving-prefill fast path (a 32k-seq prefill otherwise computes and
+    communicates a (B, 32768, V) logits tensor just to slice one row;
+    EXPERIMENTS.md §Perf iteration 2)."""
+    prefix, unit, n_rep, suffix = pattern_segments(cfg)
+    x = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = _positions(cfg, b, s, batch)
+
+    mkv_prefix = mkv_scan = mkv_suffix = None
+    if cfg.is_encdec:
+        memory = encode(params, cfg, batch["src_embeddings"], remat=remat)
+        mk = lambda p: attention.memory_kv(p["cross"], cfg, memory)
+        mkv_prefix = [mk(p) for p in params["prefix_layers"]]
+        mkv_scan = [jax.vmap(mk)(sp) for sp in params["scan_blocks"]]
+        mkv_suffix = [mk(p) for p in params["suffix_layers"]]
+
+    aux_total = 0.0
+    for i, (p, kind) in enumerate(zip(params["prefix_layers"], prefix)):
+        x, aux = _block_apply(p, cfg, kind, i, x, positions,
+                              memory_kv=None if mkv_prefix is None
+                              else mkv_prefix[i], use_flash=use_flash)
+        aux_total = aux_total + aux
+
+    if n_rep:
+        from repro.dist.sharding import constrain_act
+
+        def body(carry, inp):
+            x, aux = carry
+            for j, kind in enumerate(unit):
+                p_j = inp[f"p{j}"]
+                mkv_j = inp.get(f"mkv{j}")
+                x, a = _block_apply(p_j, cfg, kind, len(prefix) + j, x,
+                                    positions, memory_kv=mkv_j,
+                                    use_flash=use_flash)
+                x = constrain_act(x)
+                aux = aux + a
+            return (x, aux), None
+
+        if remat:
+            policy = (jax.checkpoint_policies
+                      .dots_with_no_batch_dims_saveable
+                      if remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+        inp = {f"p{j}": sp for j, sp in enumerate(params["scan_blocks"])}
+        if mkv_scan is not None:
+            inp.update({f"mkv{j}": m for j, m in enumerate(mkv_scan)})
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, jnp.asarray(aux_total, jnp.float32)), inp)
+
+    off = len(prefix) + n_rep * len(unit)
+    for i, (p, kind) in enumerate(zip(params["suffix_layers"], suffix)):
+        x, aux = _block_apply(p, cfg, kind, off + i, x, positions,
+                              memory_kv=None if mkv_suffix is None
+                              else mkv_suffix[i], use_flash=use_flash)
+        aux_total = aux_total + aux
+
+    if logits_positions == "last":
+        x = x[:, -1:]
+    x = _norm(cfg, params["final_norm"], x)
+    return _lm_head(params, cfg, x), aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_flash: bool = False,
+            remat: bool = False, remat_policy: str = "full"):
+    from repro.models.transformer import sharded_cross_entropy
+    logits, aux = apply(params, cfg, batch, use_flash=use_flash, remat=remat,
+                        remat_policy=remat_policy)
+    ce = sharded_cross_entropy(logits, batch["labels"],
+                               softcap=cfg.logit_softcap)
+    return ce + aux
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def _init_block_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      window: int, dtype, quantize_kv: bool = False):
+    if kind == "attn":
+        return attention.init_cache(cfg, batch, seq_len, window=window,
+                                    dtype=dtype, quantize=quantize_kv)
+    if kind == "local_attn":
+        return attention.init_cache(cfg, batch, seq_len,
+                                    window=cfg.local_window, dtype=dtype,
+                                    quantize=quantize_kv)
+    if kind == "mla":
+        return mla.init_cache(cfg, batch, seq_len, window=window, dtype=dtype)
+    if kind == "rwkv":
+        st = rwkv.init_state(cfg, batch)
+        st["prev_x_ffn"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+        return st
+    if kind == "rglru":
+        return rglru.init_state(cfg, batch, dtype=dtype)
+    raise ValueError(kind)
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int, *,
+                      window: int = 0, dtype=jnp.bfloat16,
+                      memory: Optional[jnp.ndarray] = None,
+                      quantize_kv: bool = False) -> PyTree:
+    prefix, unit, n_rep, suffix = pattern_segments(cfg)
+    mk = lambda k: _init_block_state(cfg, k, batch, seq_len, window, dtype,
+                                     quantize_kv)
+    state: dict = {
+        "prefix": [mk(k) for k in prefix],
+        "scan": [jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape)
+            .astype(a.dtype), mk(k))
+            for k in unit] if n_rep else [],
+        "suffix": [mk(k) for k in suffix],
+    }
+    if cfg.is_encdec:
+        if memory is None:
+            raise ValueError("enc-dec decode needs encoder memory")
+        mk = lambda p: attention.memory_kv(p["cross"], cfg, memory)
+        state["memory_kv_prefix"] = [mk(p) for p in params["prefix_layers"]]
+        state["memory_kv_scan"] = [jax.vmap(mk)(sp)
+                                   for sp in params["scan_blocks"]]
+        state["memory_kv_suffix"] = [mk(p) for p in params["suffix_layers"]]
+    return state
+
+
+def _block_decode(p, cfg: ModelConfig, kind: str, layer_idx: int, x, st,
+                  memory_kv=None):
+    if kind == "rwkv":
+        h = _norm(cfg, p["ln1"], x)
+        tm_state = {"prev_x": st["prev_x"], "wkv": st["wkv"]}
+        mix, tm_state = rwkv.time_mix_decode(p["mixer"], cfg, h, tm_state)
+        x = x + mix
+        h2 = _norm(cfg, p["ln2"], x)
+        ffn_out, new_prev = rwkv.channel_mix_decode(p["ffn"], cfg, h2,
+                                                    st["prev_x_ffn"])
+        x = x + ffn_out
+        return x, {"prev_x": tm_state["prev_x"], "wkv": tm_state["wkv"],
+                   "prev_x_ffn": new_prev}
+
+    h = _norm(cfg, p["ln1"], x)
+    if kind in ("attn", "local_attn"):
+        mix, st = attention.decode_attention(p["mixer"], cfg, h, st)
+    elif kind == "mla":
+        mix, st = mla.decode_attention(p["mixer"], cfg, h, st)
+    elif kind == "rglru":
+        mix, st = rglru.rglru_block_decode(p["mixer"], cfg, h, st)
+    else:
+        raise ValueError(kind)
+
+    if cfg.parallel_block:
+        ffn_out, _ = _ffn_apply(p["ffn"], cfg, h, layer_idx)
+        return x + mix + ffn_out, st
+    x = x + mix
+    if memory_kv is not None:
+        hc = _norm(cfg, p["ln_cross"], x)
+        x = x + attention.cross_attention(p["cross"], cfg, hc, memory_kv)
+    h2 = _norm(cfg, p["ln2"], x)
+    ffn_out, _ = _ffn_apply(p["ffn"], cfg, h2, layer_idx)
+    return x + ffn_out, st
+
+
+def decode_step(params, cfg: ModelConfig, inputs, state) -> tuple:
+    prefix, unit, n_rep, suffix = pattern_segments(cfg)
+    x = embed_inputs(params, cfg, inputs)
+    new_state = dict(state)
+
+    new_prefix = []
+    for i, (p, kind) in enumerate(zip(params["prefix_layers"], prefix)):
+        mkv = state.get("memory_kv_prefix", [None] * len(prefix))[i] \
+            if cfg.is_encdec else None
+        x, st = _block_decode(p, cfg, kind, i, x, state["prefix"][i], mkv)
+        new_prefix.append(st)
+    new_state["prefix"] = new_prefix
+
+    if n_rep:
+        from repro.dist.sharding import constrain_act
+
+        def body(x, inp):
+            new_sts = {}
+            for j, kind in enumerate(unit):
+                mkv = inp.get(f"mkv{j}")
+                x, st = _block_decode(inp[f"p{j}"], cfg, kind,
+                                      len(prefix) + j, x, inp[f"s{j}"], mkv)
+                x = constrain_act(x)
+                new_sts[f"s{j}"] = st
+            return x, new_sts
+
+        inp = {f"p{j}": sp for j, sp in enumerate(params["scan_blocks"])}
+        inp.update({f"s{j}": ss for j, ss in enumerate(state["scan"])})
+        if cfg.is_encdec:
+            inp.update({f"mkv{j}": m
+                        for j, m in enumerate(state["memory_kv_scan"])})
+        x, new_scan = jax.lax.scan(body, x, inp)
+        new_state["scan"] = [new_scan[f"s{j}"] for j in range(len(unit))]
+
+    off = len(prefix) + n_rep * len(unit)
+    new_suffix = []
+    for i, (p, kind) in enumerate(zip(params["suffix_layers"], suffix)):
+        mkv = state.get("memory_kv_suffix", [None] * len(suffix))[i] \
+            if cfg.is_encdec else None
+        x, st = _block_decode(p, cfg, kind, off + i, x, state["suffix"][i],
+                              mkv)
+        new_suffix.append(st)
+    new_state["suffix"] = new_suffix
+
+    x = _norm(cfg, params["final_norm"], x)
+    return _lm_head(params, cfg, x), new_state

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, momentum_sgd, sgd,
+                                    clip_by_global_norm, cosine_schedule,
+                                    make_optimizer)
+
+__all__ = ["Optimizer", "adamw", "momentum_sgd", "sgd",
+           "clip_by_global_norm", "cosine_schedule", "make_optimizer"]

@@ -1,0 +1,130 @@
+"""Hand-rolled first-order optimizers (no optax in the container).
+
+All optimizers share one interface:
+    opt = sgd(lr) | momentum_sgd(lr, beta) | adamw(lr, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+`moment_dtype` controls optimizer-state precision — the fp32-vs-bf16 moment
+tradeoff is what lets grok-1-314b's train state fit 16 GB/chip (recorded in
+EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray]) -> Optimizer:
+    """Plain SGD — the paper's Eq. (1.10); lr may be a schedule fn(step)."""
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr(step) if callable(lr) else lr
+        updates = _tmap(lambda g: (-eta * g).astype(g.dtype), grads)
+        return updates, {"step": step + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum_sgd(lr: float, beta: float = 0.9, *,
+                 moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(lambda p: jnp.zeros(p.shape, moment_dtype), params)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr(step) if callable(lr) else lr
+        m = _tmap(lambda m_, g: beta * m_ + g.astype(moment_dtype),
+                  state["m"], grads)
+        updates = _tmap(lambda m_, p: (-eta * m_).astype(p.dtype), m, params)
+        return updates, {"step": step + 1, "m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adamw(lr: float | Callable, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = lr(step) if callable(lr) else lr
+        m = _tmap(lambda m_, g: (b1 * m_ + (1 - b1) * g).astype(moment_dtype),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: (b2 * v_ + (1 - b2) * g * g)
+                  .astype(moment_dtype), state["v"], grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            mhat = m_.astype(jnp.float32) / bc1
+            vhat = v_.astype(jnp.float32) / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-eta * u).astype(p.dtype)
+
+        updates = _tmap(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return _tmap(lambda p, u: p + u, params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return _tmap(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(peak_lr: float, *, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum_sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise KeyError(f"unknown optimizer '{name}'")

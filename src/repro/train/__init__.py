@@ -1,0 +1,6 @@
+from repro.train.steps import (TrainStepConfig, init_train_state,
+                               make_prefill_step, make_serve_step,
+                               make_train_step)
+
+__all__ = ["TrainStepConfig", "init_train_state", "make_train_step",
+           "make_serve_step", "make_prefill_step"]

@@ -1,0 +1,162 @@
+"""Production train / serve steps (pjit tier).
+
+`make_train_step` builds one jit-able function:
+    state, metrics = train_step(state, batch)
+with the paper's communication relaxations attached at the gradient-exchange
+point of the *sharded* trainer:
+
+  * grad_compression='rq8'/...  — server-side compression of the device-owned
+    gradient shard (the multi-server-PS view of Eq. 3.2: each device is the
+    parameter server of its FSDP partition, so quantizing its shard is
+    exactly the PS's outgoing Q; DESIGN.md §2 records why worker-side Q is
+    not interceptable under pjit autodiff).
+  * error_feedback=True — single-sided DoubleSqueeze (Eq. 3.10-3.11) on the
+    same shard: delta carried in the train state.
+  * The exact two-sided algorithms live in repro.core.parallel (algorithm
+    tier) and are validated against the theorems there.
+
+`make_serve_step` builds the single-token decode step used by the decode
+input shapes (decode_32k / long_500k) and the serving example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.models import transformer, transformer_scan
+from repro.models.common import ModelConfig
+from repro.optim.optimizers import (Optimizer, apply_updates,
+                                    clip_by_global_norm)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    remat: bool = False
+    use_flash: bool = False
+    grad_clip: float = 1.0
+    grad_compression: str = "none"    # compression registry key
+    error_feedback: bool = False      # single-sided EC on the grad shard
+    param_dtype: Any = jnp.float32
+    scan_layers: bool = False         # stacked params + lax.scan over blocks
+    remat_policy: str = "full"        # full | dots (save matmul outputs)
+
+
+def _impl(scan_layers: bool):
+    return transformer_scan if scan_layers else transformer
+
+
+def init_train_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array,
+                     *, step_cfg: TrainStepConfig = TrainStepConfig()) -> dict:
+    params = _impl(step_cfg.scan_layers).init(cfg, key,
+                                              dtype=step_cfg.param_dtype)
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": key,
+    }
+    if step_cfg.error_feedback:
+        state["ec_err"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer: Optimizer, *,
+                         step_cfg: TrainStepConfig = TrainStepConfig()):
+    """ShapeDtypeStruct train state (dry-run: nothing is allocated)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, optimizer, k, step_cfg=step_cfg),
+        jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    step_cfg: TrainStepConfig = TrainStepConfig()):
+    q_fn, q_spec = compression.get(step_cfg.grad_compression)
+
+    impl = _impl(step_cfg.scan_layers)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        def loss(params):
+            kw = {}
+            if step_cfg.scan_layers:
+                kw["remat_policy"] = step_cfg.remat_policy
+            return impl.loss_fn(params, cfg, batch,
+                                use_flash=step_cfg.use_flash,
+                                remat=step_cfg.remat, **kw)
+
+        loss_val, grads = jax.value_and_grad(loss)(state["params"])
+        if step_cfg.grad_clip > 0:
+            grads, grad_norm = clip_by_global_norm(grads, step_cfg.grad_clip)
+        else:
+            grad_norm = jnp.zeros(())
+
+        new_state = dict(state)
+        if step_cfg.grad_compression != "none":
+            qkey = jax.random.fold_in(state["rng"], state["step"])
+            if step_cfg.error_feedback:
+                v = jax.tree_util.tree_map(
+                    lambda g, d: g.astype(jnp.float32) + d,
+                    grads, state["ec_err"])
+                grads = compression.tree_compress(v, qkey, q_fn)
+                new_state["ec_err"] = jax.tree_util.tree_map(
+                    lambda v_, q: v_ - q.astype(jnp.float32), v, grads)
+            else:
+                grads = compression.tree_compress(grads, qkey, q_fn)
+
+        updates, new_opt = optimizer.update(grads, state["opt"],
+                                            state["params"])
+        new_state["params"] = apply_updates(state["params"], updates)
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = {"loss": loss_val, "grad_norm": grad_norm,
+                   "step": state["step"]}
+        return new_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+
+def make_serve_step(cfg: ModelConfig, *, scan_layers: bool = False):
+    """decode: (params, decode_state, inputs) -> (next_token_logits, state)."""
+    impl = _impl(scan_layers)
+
+    def serve_step(params, decode_state, inputs):
+        logits, new_state = impl.decode_step(params, cfg, inputs,
+                                             decode_state)
+        return logits[:, -1], new_state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, use_flash: bool = False,
+                      scan_layers: bool = False,
+                      logits_positions: str = "all"):
+    """prefill: full-sequence forward returning last-position logits.
+
+    (Prefill reuses `apply`; cache population for subsequent decode is done
+    by running decode_step over the prompt in the serving example — bulk
+    cache prefill is a recorded future optimization in EXPERIMENTS §Perf.)
+    """
+
+    impl = _impl(scan_layers)
+
+    def prefill_step(params, batch):
+        kw = {}
+        if scan_layers:
+            kw["logits_positions"] = logits_positions
+        logits, _ = impl.apply(params, cfg, batch, use_flash=use_flash,
+                               remat=scan_layers, **kw)
+        return logits[:, -1]
+
+    return prefill_step

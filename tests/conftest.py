@@ -1,0 +1,9 @@
+import os
+
+# Keep the default 1-device CPU view for smoke tests and benches; ONLY
+# launch/dryrun.py forces 512 host devices (see the system design brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,110 @@
+"""Exact algebraic tests for the exchange operators (Sections 3-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import communicators as C
+from repro.core import compression, mixing
+
+AXIS = "w"
+
+
+def _vrun(exchange, grads, state, key):
+    return jax.vmap(lambda g, s: exchange(g, s, key, axis_name=AXIS),
+                    axis_name=AXIS)(grads, state)
+
+
+def test_mbsgd_is_exact_mean():
+    g = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    ex = C.MbSGDExchange()
+    out, _ = _vrun(ex, g, jax.vmap(ex.init)(g), jax.random.PRNGKey(1))
+    np.testing.assert_allclose(out, jnp.broadcast_to(g.mean(0), (4, 16)),
+                               rtol=1e-6)
+
+
+def test_csgd_ps_form_eq_3_2():
+    """out = Q(mean_n Q(g_n)) with per-worker inner keys, shared outer key."""
+    n = 4
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, 32))
+    ex = C.CSGDPSExchange(compressor="rq8")
+    key = jax.random.PRNGKey(1)
+    out, _ = _vrun(ex, g, jax.vmap(ex.init)(g), key)
+    # manual replication of Eq. 3.2
+    q_fn, _ = compression.get("rq8")
+    inner = jnp.stack([
+        compression.tree_compress(g[i], jax.random.fold_in(key, i), q_fn)
+        for i in range(n)])
+    expect = compression.tree_compress(inner.mean(0),
+                                       jax.random.fold_in(key, 0x5E4E4), q_fn)
+    np.testing.assert_allclose(out[0], expect, rtol=1e-5, atol=1e-6)
+    # identical broadcast on every worker (it is ONE message in the paper)
+    for i in range(1, n):
+        np.testing.assert_allclose(out[i], out[0], rtol=0, atol=0)
+
+
+def test_ecsgd_lemma_3_4_1_recursion():
+    """Lemma 3.4.1: x~_{t+1} = x~_t - lr * mean_n g_n  EXACTLY, where
+    x~_t = x_t - lr * Omega_{t-1}, Omega = server_err + mean worker_err."""
+    n, d, lr, steps = 4, 24, 0.1, 6
+    key = jax.random.PRNGKey(0)
+    ex = C.ECSGDExchange(compressor="sign1")
+    x = jnp.zeros((d,))
+    state = jax.vmap(ex.init)(jnp.zeros((n, d)))
+    omega_prev = jnp.zeros((d,))
+    x_tilde = x.copy()
+    for t in range(steps):
+        g = jax.random.normal(jax.random.fold_in(key, t), (n, d))
+        out, state = _vrun(ex, g, state, jax.random.fold_in(key, 100 + t))
+        x = x - lr * out[0]
+        omega = state["server_err"][0] + state["worker_err"].mean(0)
+        # Lemma: (x_t - lr*Omega_{t-1}) follows plain averaged-SGD
+        x_tilde = x_tilde - lr * g.mean(0)
+        np.testing.assert_allclose(x - lr * omega, x_tilde, rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_delayed_exchange_exact_tau_delay():
+    """Assumption 5 with D(t) = t - tau: output at step t is the input mean
+    from step t - tau (zeros during warmup)."""
+    n, d, tau = 2, 8, 3
+    ex = C.DelayedExchange(inner=C.MbSGDExchange(), tau=tau)
+    state = jax.vmap(ex.init)(jnp.zeros((n, d)))
+    outs, means = [], []
+    for t in range(8):
+        g = jnp.stack([jnp.full((d,), float(t * 10 + i)) for i in range(n)])
+        means.append(g.mean(0))
+        out, state = _vrun(ex, g, state, jax.random.PRNGKey(t))
+        outs.append(out[0])
+    for t in range(8):
+        expect = jnp.zeros((d,)) if t < tau else means[t - tau]
+        np.testing.assert_allclose(outs[t], expect, rtol=1e-6)
+
+
+def test_gossip_ring_equals_w2_matrix():
+    """GossipMix(ring) == X @ W2 with the paper's 1/3 ring matrix."""
+    n, d = 8, 5
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    mixed = jax.vmap(lambda xi: C.GossipMix("ring")(xi, axis_name=AXIS),
+                     axis_name=AXIS)(x)
+    w2 = mixing.ring(n)
+    np.testing.assert_allclose(mixed, jnp.asarray(w2) @ x, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_gossip_full_equals_mean():
+    n, d = 4, 7
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    mixed = jax.vmap(lambda xi: C.GossipMix("full")(xi, axis_name=AXIS),
+                     axis_name=AXIS)(x)
+    np.testing.assert_allclose(mixed, jnp.broadcast_to(x.mean(0), (n, d)),
+                               rtol=1e-5)
+
+
+def test_csgd_ring_reduces_to_mean_without_noise():
+    """With the identity compressor the ring chain is an exact mean."""
+    n = 4
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, 16))
+    ex = C.CSGDRingExchange(compressor="none")
+    out, _ = _vrun(ex, g, jax.vmap(ex.init)(g), jax.random.PRNGKey(1))
+    np.testing.assert_allclose(out, jnp.broadcast_to(g.mean(0), (n, 16)),
+                               rtol=1e-5)

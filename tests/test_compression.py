@@ -1,0 +1,98 @@
+"""Property tests for the Section 3 compression operators (Assumptions 3/4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression
+
+
+def _rand(key, n, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), (n,)) * scale
+
+
+@pytest.mark.parametrize("name,bound", [("rq8", 0.3), ("rq4", 0.3),
+                                        ("rq2", 0.3),
+                                        ("rand_sparse_10", 1.0)])
+def test_unbiasedness_statistical(name, bound):
+    """E[Q(x)] = x for the unbiased operators (Assumption 3).
+
+    Bound ~ 5 * sigma'(op) / sqrt(n_draws); sparsification has per-coord
+    std |x| * sqrt((1-p)/p) = 3|x|, hence the looser bound.
+    """
+    fn, spec = compression.get(name)
+    assert spec.unbiased
+    x = _rand(0, 256)
+    keys = jax.random.split(jax.random.PRNGKey(1), 600)
+    qs = jax.vmap(lambda k: fn(x, k))(keys)
+    bias = jnp.abs(qs.mean(0) - x).max()
+    assert float(bias) < bound, f"{name} bias {bias}"
+
+
+@pytest.mark.parametrize("name", ["rq8", "rq4"])
+def test_quantization_bounded_by_range(name):
+    fn, _ = compression.get(name)
+    x = _rand(2, 512, scale=3.0)
+    q = fn(x, jax.random.PRNGKey(3))
+    assert float(q.min()) >= float(x.min()) - 1e-5
+    assert float(q.max()) <= float(x.max()) + 1e-5
+
+
+def test_rq8_error_much_smaller_than_rq2():
+    x = _rand(4, 1024)
+    e8 = jnp.abs(compression.get("rq8")[0](x, jax.random.PRNGKey(0)) - x).mean()
+    e2 = jnp.abs(compression.get("rq2")[0](x, jax.random.PRNGKey(0)) - x).mean()
+    assert float(e8) * 10 < float(e2)
+
+
+def test_sign_is_biased_but_norm_preserving_direction():
+    fn, spec = compression.get("sign1")
+    assert not spec.unbiased
+    x = _rand(5, 128)
+    q = fn(x, None)
+    assert jnp.all(jnp.sign(q) == jnp.sign(x))
+    np.testing.assert_allclose(jnp.abs(q), jnp.mean(jnp.abs(x)), rtol=1e-5)
+
+
+def test_clip16_is_mantissa_truncation():
+    """Deterministic low-bit clipping (Section 3.2's 'Clipping'): keeps the
+    top 16 bits — truncation toward zero in the mantissa, i.e. |q| <= |x|
+    and the error is below one bf16 ULP. (bf16 *cast* rounds-to-nearest,
+    so it is intentionally NOT the comparison.)"""
+    x = _rand(6, 128)
+    q = compression.get("clip16")[0](x, None)
+    assert jnp.all(jnp.abs(q) <= jnp.abs(x))
+    ulp = 2.0 ** (jnp.floor(jnp.log2(jnp.abs(x))) - 7)
+    assert jnp.all(jnp.abs(q - x) < ulp + 1e-12)
+
+
+def test_topk_keeps_largest():
+    fn, _ = compression.get("topk_1")
+    x = jnp.arange(1000.0) - 500.0
+    q = fn(x)
+    nz = int((q != 0).sum())
+    assert 10 <= nz <= 11
+    assert q[0] != 0 and q[-1] != 0 and q[500] == 0
+
+
+@given(st.integers(min_value=1, max_value=10**7))
+@settings(max_examples=25, deadline=None)
+def test_wire_cost_model(n):
+    """Compression ratio eta < 1 for every operator vs fp32 (Table 1.1)."""
+    for name in ("rq8", "rq4", "rq2", "sign1", "clip16"):
+        _, spec = compression.get(name)
+        if n > 100:
+            assert spec.ratio(n) < 1.0
+        assert spec.compressed_bytes(n) > 0
+
+
+def test_tree_compress_independent_keys():
+    tree = {"a": _rand(7, 64), "b": _rand(8, 64)}
+    fn, _ = compression.get("rq8")
+    out = compression.tree_compress(tree, jax.random.PRNGKey(0), fn)
+    assert out["a"].shape == (64,) and out["b"].shape == (64,)
+    # same values -> different keys -> different quantization noise
+    tree2 = {"a": tree["a"], "b": tree["a"]}
+    out2 = compression.tree_compress(tree2, jax.random.PRNGKey(0), fn)
+    assert not jnp.allclose(out2["a"], out2["b"])

@@ -1,0 +1,112 @@
+"""Convergence-claim validation on the quadratic testbed (Tables 1.1/1.2,
+Theorems 1.1.1-5.2.6). These are the paper's own experiments in miniature;
+EXPERIMENTS.md §Claims summarizes the numbers."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import parallel
+
+
+def final_gnorm(res, k=20):
+    return float(res.grad_norms[-k:].mean())
+
+
+def test_gd_converges_to_stationary_point():
+    """Thm 1.1.1: averaged grad norm -> 0 at rate ~ L/T."""
+    res = parallel.run_quadratic("gd", steps=400, lr=0.5)
+    g = np.asarray(res.grad_norms)
+    assert g[-1] < 1e-3 * g[0]
+    # 1/T rate: halving error needs ~2x steps (monotone decrease suffices
+    # as a sanity proxy on a strongly-convex quadratic)
+    assert np.all(np.diff(g[10:]) <= 1e-9)
+
+
+def test_sgd_noise_floor_vs_minibatch():
+    """Eq. (1.20): minibatching divides the variance term by B. The floor
+    gamma*L*sigma^2/B only separates from numerical residue at a healthy
+    learning rate (the testbed's L ~ (1+sqrt(d/M))^2/d ~ 0.04)."""
+    sgd = parallel.run_quadratic("sgd", steps=600, lr=0.3, batch=1, seed=1)
+    mb = parallel.run_quadratic("mbsgd", n_workers=8, steps=600, lr=0.3,
+                                batch=1, seed=1)
+    assert final_gnorm(mb, k=50) < 0.5 * final_gnorm(sgd, k=50)
+
+
+def test_csgd_adds_variance_but_converges():
+    """Eq. (3.6): CSGD converges; coarser quantization = higher floor."""
+    base = parallel.run_quadratic("mbsgd", n_workers=4, steps=300, lr=0.05)
+    c8 = parallel.run_quadratic("csgd_ps", n_workers=4, steps=300, lr=0.05,
+                                exchange_kw={"compressor": "rq8"})
+    c2 = parallel.run_quadratic("csgd_ps", n_workers=4, steps=300, lr=0.05,
+                                exchange_kw={"compressor": "rq2"})
+    assert final_gnorm(c8) < 5e-2                      # converges
+    assert final_gnorm(c2) > final_gnorm(c8) - 1e-5    # coarser >= floor
+    assert final_gnorm(c8) < final_gnorm(c2) * 1.5 + 5e-2
+    del base
+
+
+def test_ecsgd_beats_naive_biased_compression():
+    """Section 3.3: with a biased compressor (sign), plain CSGD stalls or
+    diverges while EC-SGD tracks mb-SGD."""
+    ec = parallel.run_quadratic("ecsgd", n_workers=4, steps=400, lr=0.05,
+                                exchange_kw={"compressor": "sign1"})
+    naive = parallel.run_quadratic("csgd_ps", n_workers=4, steps=400,
+                                   lr=0.05,
+                                   exchange_kw={"compressor": "sign1"})
+    ref = parallel.run_quadratic("mbsgd", n_workers=4, steps=400, lr=0.05)
+    assert final_gnorm(ec) < 3 * final_gnorm(ref) + 1e-3
+    assert final_gnorm(ec) < 0.65 * final_gnorm(naive)
+
+
+def test_asgd_staleness_slows_but_converges():
+    """Thm 4.2.2: bounded staleness keeps convergence; larger tau is not
+    faster; tau=0-equivalent matches mb-SGD."""
+    t0 = parallel.run_quadratic("mbsgd", n_workers=4, steps=400, lr=0.05)
+    t4 = parallel.run_quadratic("asgd", n_workers=4, steps=400, lr=0.05,
+                                exchange_kw={"tau": 4})
+    t16 = parallel.run_quadratic("asgd", n_workers=4, steps=400, lr=0.05,
+                                 exchange_kw={"tau": 16})
+    assert final_gnorm(t4) < 5e-2
+    assert final_gnorm(t16) >= final_gnorm(t4) - 1e-4
+    assert final_gnorm(t4) >= final_gnorm(t0) - 1e-4
+
+
+def test_asgd_too_large_staleness_with_large_lr_unstable():
+    """The tau * lr * L <= 1/2 condition (Eq. 4.8) bites. The testbed's
+    L ~ 0.04, so sync-SGD is stable up to lr ~ 2/L ~ 46 while tau = 16
+    delay caps it at ~ 1/(tau L) ~ 1.5: lr = 30 separates the regimes."""
+    stable = parallel.run_quadratic("mbsgd", n_workers=4, steps=200, lr=20.0)
+    wild = parallel.run_quadratic("asgd", n_workers=4, steps=200, lr=20.0,
+                                  exchange_kw={"tau": 16})
+    w = final_gnorm(wild)
+    assert (not np.isfinite(w)) or w > 10 * final_gnorm(stable)
+
+
+def test_dsgd_consensus_and_convergence():
+    """Thm 5.2.6 + Lemma 5.2.4: DSGD converges and the local models reach
+    consensus (||x_n - x_bar|| -> small)."""
+    res = parallel.run_quadratic("dsgd", n_workers=8, steps=500, lr=0.05,
+                                 heterogeneity=0.3)
+    assert final_gnorm(res) < 5e-2
+    assert float(res.consensus[-1]) < float(res.consensus[5]) * 10
+    assert float(res.consensus[-1]) < 1e-2
+
+
+def test_dsgd_full_topology_matches_mbsgd():
+    """Thm 5.2.6 consistency: rho = 0 (fully connected) reduces DSGD to
+    mb-SGD exactly (same data partitioning)."""
+    full = parallel.run_quadratic("dsgd", n_workers=4, steps=200, lr=0.05,
+                                  gossip_topology="full")
+    ring = parallel.run_quadratic("dsgd", n_workers=4, steps=200, lr=0.05)
+    # both converge; full-topology consensus is exact (0)
+    assert float(full.consensus[-1]) < 1e-10
+    assert final_gnorm(full) < 5e-2 and final_gnorm(ring) < 5e-2
+
+
+def test_dsgd_heterogeneity_raises_floor():
+    """The varsigma (outer-variance) term of Thm 5.2.6."""
+    homo = parallel.run_quadratic("dsgd", n_workers=8, steps=300, lr=0.05,
+                                  heterogeneity=0.0, seed=3)
+    hetero = parallel.run_quadratic("dsgd", n_workers=8, steps=300, lr=0.05,
+                                    heterogeneity=2.0, seed=3)
+    assert final_gnorm(hetero) > final_gnorm(homo)

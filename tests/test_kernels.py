@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import ops as fa_ops, ref as fa_ref
+from repro.kernels.quant import ops as q_ops, ref as q_ref
+from repro.kernels.wkv6 import ops as wkv_ops, ref as wkv_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- quant ----
+
+@pytest.mark.parametrize("shape", [(1000,), (17, 300), (4, 128, 65)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_kernel_matches_oracle(shape, bits):
+    x = jax.random.normal(jax.random.fold_in(KEY, hash(shape) % 997), shape)
+    out = q_ops.quantize_dequantize(x, KEY, bits=bits)
+    lo, scale = q_ref.quant_params(x, bits)
+    x2d, _ = q_ops._to_2d(x)
+    u = jax.random.uniform(KEY, x2d.shape, jnp.float32)
+    expect = q_ref.decode(q_ref.encode(x2d, u, lo, scale, bits=bits),
+                          lo, scale).reshape(-1)[:x.size].reshape(shape)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_encode_decode_roundtrip(dtype):
+    x = (jax.random.normal(KEY, (513,)) * 2).astype(dtype)
+    codes, params = q_ops.encode(x, KEY, bits=8)
+    assert codes.dtype == jnp.uint8
+    dec = q_ops.decode(codes, params, shape=(513,))
+    assert float(jnp.abs(dec - x.astype(jnp.float32)).max()) < 0.1
+
+
+def test_quant_kernel_unbiased():
+    x = jax.random.normal(KEY, (2048,))
+    qs = jax.vmap(lambda k: q_ops.quantize_dequantize(x, k, bits=4))(
+        jax.random.split(KEY, 300))
+    assert float(jnp.abs(qs.mean(0) - x).max()) < 0.1
+
+
+# ----------------------------------------------------------- flash_attn ----
+
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d,causal,window,cap",
+    [(2, 256, 4, 2, 64, True, 0, 0.0),
+     (1, 128, 8, 1, 128, True, 0, 0.0),
+     (2, 200, 4, 4, 64, True, 64, 0.0),       # window + pad
+     (1, 256, 4, 2, 64, True, 0, 30.0),       # softcap (grok)
+     (1, 192, 4, 2, 64, False, 0, 0.0),       # non-causal (encoder)
+     (2, 96, 2, 2, 32, True, 0, 0.0)])
+def test_flash_attention_matches_oracle(b, s, hq, hkv, d, causal, window,
+                                        cap):
+    kq, kk, kv = jax.random.split(jax.random.fold_in(KEY, s * hq), 3)
+    q = jax.random.normal(kq, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (b, s, hkv, d), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 softcap=cap)
+    exp = fa_ref.attention(q, k, v, causal=causal, window=window,
+                           softcap=cap)
+    np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(KEY, (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 64),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 64),
+                          jnp.bfloat16)
+    out = fa_ops.flash_attention(q, k, v, causal=True)
+    exp = fa_ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               exp.astype(jnp.float32), rtol=0.05, atol=0.05)
+
+
+# ----------------------------------------------------------------- wkv6 ----
+
+@pytest.mark.parametrize("b,s,h,dk", [(2, 128, 2, 64), (1, 100, 4, 32),
+                                      (2, 192, 1, 64)])
+def test_wkv6_kernel_matches_recurrence(b, s, h, dk):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * h), 5)
+    r = jax.random.normal(ks[0], (b, s, h, dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, dk)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, dk)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (h, dk)) * 0.1
+    s0 = jax.random.normal(jax.random.fold_in(KEY, 9), (b, h, dk, dk)) * 0.1
+    out_k, st_k = wkv_ops.wkv6(r, k, v, lw, u, state0=s0)
+    out_s, st_s = wkv_ref.wkv6_stepwise(r, k, v, lw, u, state0=s0)
+    np.testing.assert_allclose(out_k, out_s, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st_k, st_s, rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_chunked_oracle_matches_recurrence():
+    b, s, h, dk = 1, 96, 2, 32
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, dk)) * 0.5
+               for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, dk)) * 0.3 - 2.5)
+    u = jax.random.normal(ks[4], (h, dk)) * 0.1
+    out_c, st_c = wkv_ref.wkv6(r, k, v, lw, u, chunk=32)
+    out_s, st_s = wkv_ref.wkv6_stepwise(r, k, v, lw, u)
+    np.testing.assert_allclose(out_c, out_s, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st_c, st_s, rtol=1e-4, atol=1e-4)

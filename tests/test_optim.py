@@ -1,0 +1,88 @@
+"""Optimizer unit tests (hand-rolled substrate: no optax offline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import optimizers as O
+
+
+def _params():
+    return {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([0.5])}
+
+
+def _grads():
+    return {"w": jnp.array([0.1, 0.2, -0.3]), "b": jnp.array([1.0])}
+
+
+def test_sgd_is_plain_descent():
+    opt = O.sgd(0.1)
+    st_ = opt.init(_params())
+    upd, st_ = opt.update(_grads(), st_, _params())
+    np.testing.assert_allclose(upd["w"], -0.1 * _grads()["w"], rtol=1e-6)
+    assert int(st_["step"]) == 1
+
+
+def test_sgd_schedule_callable():
+    opt = O.sgd(lambda step: 0.1 / (1.0 + step.astype(jnp.float32)))
+    st_ = opt.init(_params())
+    u0, st_ = opt.update(_grads(), st_, _params())
+    u1, st_ = opt.update(_grads(), st_, _params())
+    np.testing.assert_allclose(u1["w"], u0["w"] / 2, rtol=1e-6)
+
+
+def test_momentum_accumulates():
+    opt = O.momentum_sgd(1.0, beta=0.5)
+    st_ = opt.init(_params())
+    u0, st_ = opt.update(_grads(), st_, _params())
+    u1, st_ = opt.update(_grads(), st_, _params())
+    # m1 = g, m2 = 0.5 g + g = 1.5 g
+    np.testing.assert_allclose(u1["w"], 1.5 * u0["w"], rtol=1e-6)
+
+
+def test_adamw_first_step_is_signed_unit_step():
+    """With bias correction, step 1 gives -lr * g/|g| elementwise (eps->0)."""
+    opt = O.adamw(1e-2, b1=0.9, b2=0.999, eps=1e-12)
+    st_ = opt.init(_params())
+    upd, st_ = opt.update(_grads(), st_, _params())
+    np.testing.assert_allclose(upd["w"], -1e-2 * jnp.sign(_grads()["w"]),
+                               rtol=1e-4)
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = O.adamw(1e-2, weight_decay=0.1)
+    st_ = opt.init(_params())
+    zero_g = jax.tree_util.tree_map(jnp.zeros_like, _grads())
+    upd, _ = opt.update(zero_g, st_, _params())
+    assert float(upd["w"][0]) < 0 and float(upd["w"][1]) > 0  # toward 0
+
+
+def test_adamw_moment_dtype_bf16():
+    opt = O.adamw(1e-3, moment_dtype=jnp.bfloat16)
+    st_ = opt.init(_params())
+    assert st_["m"]["w"].dtype == jnp.bfloat16
+    upd, st_ = opt.update(_grads(), st_, _params())
+    assert bool(jnp.isfinite(upd["w"]).all())
+
+
+@given(st.floats(0.1, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm_property(max_norm):
+    g = {"a": jnp.array([3.0, 4.0]), "b": jnp.array([12.0])}   # norm 13
+    clipped, gn = O.clip_by_global_norm(g, max_norm)
+    assert float(gn) == pytest.approx(13.0, rel=1e-5)
+    new_norm = float(jnp.sqrt(sum(jnp.sum(l**2) for l in
+                                  jax.tree_util.tree_leaves(clipped))))
+    assert new_norm <= max_norm * (1 + 1e-5) or new_norm == pytest.approx(
+        13.0, rel=1e-5)
+    if max_norm < 13.0:
+        assert new_norm == pytest.approx(max_norm, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    lr = O.cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, rel=0.1)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+    assert float(lr(jnp.asarray(55))) > float(lr(jnp.asarray(90)))

@@ -1,0 +1,80 @@
+"""Recurrent-layer consistency: parallel scans == stepwise recurrences, and
+the Pallas WKV6 kernel wired through the model layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import rglru, rwkv
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rglru_scan_equals_stepwise():
+    """associative_scan path (prefill) == single-token recurrence (decode)."""
+    cfg = configs.get_config("recurrentgemma-9b").reduced()
+    p = rglru.rglru_block_init(KEY, cfg)
+    b, s = 2, 17
+    x = jax.random.normal(jax.random.fold_in(KEY, 1),
+                          (b, s, cfg.d_model)) * 0.5
+    full, _ = rglru.rglru_block(p, cfg, x)
+    st = rglru.init_state(cfg, b, dtype=jnp.float32)
+    steps = []
+    for i in range(s):
+        out, st = rglru.rglru_block_decode(p, cfg, x[:, i:i + 1], st)
+        steps.append(out[:, 0])
+    np.testing.assert_allclose(jnp.stack(steps, 1), full, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_rglru_state_carries_across_segments():
+    """Processing [a|b] in two segments == one segment (streaming prefill)."""
+    cfg = configs.get_config("recurrentgemma-9b").reduced()
+    p = rglru.rglru_block_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 24, cfg.d_model)) * 0.5
+    full, _ = rglru.rglru_block(p, cfg, x)
+    seg1, st = rglru.rglru_block(p, cfg, x[:, :10])
+    seg2, _ = rglru.rglru_block(p, cfg, x[:, 10:], state=st)
+    np.testing.assert_allclose(jnp.concatenate([seg1, seg2], 1), full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_time_mix_chunk_vs_decode():
+    cfg = configs.get_config("rwkv6-3b").reduced()
+    p = rwkv.time_mix_init(KEY, cfg)
+    b, s = 1, 13
+    x = jax.random.normal(jax.random.fold_in(KEY, 2),
+                          (b, s, cfg.d_model)) * 0.5
+    full, _ = rwkv.time_mix(p, cfg, x)
+    st = rwkv.init_state(cfg, b)
+    outs = []
+    for i in range(s):
+        out, st = rwkv.time_mix_decode(p, cfg, x[:, i:i + 1], st)
+        outs.append(out[:, 0])
+    np.testing.assert_allclose(jnp.stack(outs, 1), full, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_rwkv_time_mix_pallas_kernel_path():
+    """use_kernel=True routes through the Pallas WKV6 kernel (interpret on
+    CPU) and must match the jnp chunked path."""
+    cfg = configs.get_config("rwkv6-3b").reduced()
+    p = rwkv.time_mix_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 96, cfg.d_model)) * 0.5
+    ref, st_ref = rwkv.time_mix(p, cfg, x, use_kernel=False)
+    ker, st_ker = rwkv.time_mix(p, cfg, x, use_kernel=True)
+    np.testing.assert_allclose(ker, ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_ker["wkv"], st_ref["wkv"], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_rwkv_segment_streaming():
+    cfg = configs.get_config("rwkv6-3b").reduced()
+    p = rwkv.time_mix_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 40, cfg.d_model)) * 0.5
+    full, _ = rwkv.time_mix(p, cfg, x)
+    seg1, st = rwkv.time_mix(p, cfg, x[:, :16])
+    seg2, _ = rwkv.time_mix(p, cfg, x[:, 16:], state=st)
+    np.testing.assert_allclose(jnp.concatenate([seg1, seg2], 1), full,
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests: the full training substrate working together
+(data pipeline -> sharded train step -> optimizer -> checkpoint -> resume),
+plus the production-tier compressed/EC gradient paths."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import load_state, save_state
+from repro.data.pipeline import SyntheticLM
+from repro.models.common import InputShape
+from repro.optim import make_optimizer
+from repro.train import steps
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run(n_steps=30, **step_kw):
+    cfg = configs.get_config("qwen1.5-0.5b").reduced()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=33, batch=8, seed=0)
+    opt = make_optimizer("adamw", 3e-3)
+    scfg = steps.TrainStepConfig(**step_kw)
+    state = steps.init_train_state(cfg, opt, KEY, step_cfg=scfg)
+    ts = jax.jit(steps.make_train_step(cfg, opt, scfg))
+    losses = []
+    for t in range(n_steps):
+        state, m = ts(state, data.batch_at(t))
+        losses.append(float(m["loss"]))
+    return losses, state, (cfg, opt, scfg, data, ts)
+
+
+def test_training_reduces_loss():
+    losses, _, _ = _run(40)
+    assert losses[-1] < losses[0] - 0.3
+    assert all(np.isfinite(losses))
+
+
+def test_training_with_compressed_grads_and_error_feedback():
+    """Production-tier CSGD/EC path: still trains."""
+    comp, state, _ = _run(30, grad_compression="rq8", error_feedback=True)
+    assert comp[-1] < comp[0] - 0.2
+    assert "ec_err" in state
+    # error buffers are being used (non-zero)
+    err = max(float(jnp.abs(l).max())
+              for l in jax.tree_util.tree_leaves(state["ec_err"]))
+    assert err > 0
+
+
+def test_training_with_biased_compression_needs_error_feedback():
+    naive, _, _ = _run(30, grad_compression="sign1", error_feedback=False)
+    ec, _, _ = _run(30, grad_compression="sign1", error_feedback=True)
+    assert ec[-1] <= naive[-1] + 0.1   # EC at least as good
+
+
+def test_remat_equivalence():
+    """Activation checkpointing must not change the math."""
+    l1, _, _ = _run(5, remat=False)
+    l2, _, _ = _run(5, remat=True)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4)
+
+
+def test_scan_layers_training_works():
+    """scan_layers trains (different param layout -> different init draw,
+    so assert improvement, not trajectory equality; exact scanned==unrolled
+    math equivalence is covered by tests/test_models.py)."""
+    l2, _, _ = _run(25, scan_layers=True)
+    assert l2[-1] < l2[0] - 0.15
+
+
+def test_checkpoint_resume_bitexact(tmp_path):
+    losses, state, (cfg, opt, scfg, data, ts) = _run(10)
+    f = save_state(state, str(tmp_path), step=10)
+    template = jax.eval_shape(lambda: state)
+    restored = load_state(template, f)
+    s1, m1 = ts(state, data.batch_at(11))
+    s2, m2 = ts(restored, data.batch_at(11))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+
+
+def test_grad_clip_changes_updates():
+    """AdamW is scale-invariant in steady state, so assert the clip bites
+    where it must: the reported grad_norm is pre-clip, and the first-step
+    moments differ between clipped and unclipped runs."""
+    _, s_clip, _ = _run(1, grad_clip=1e-6)
+    _, s_free, _ = _run(1, grad_clip=0.0)
+    m_clip = max(float(jnp.abs(l).max())
+                 for l in jax.tree_util.tree_leaves(s_clip["opt"]["m"]))
+    m_free = max(float(jnp.abs(l).max())
+                 for l in jax.tree_util.tree_leaves(s_free["opt"]["m"]))
+    assert m_clip < 1e-6 < m_free
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    data = SyntheticLM(vocab=128, seq_len=17, batch=4, seed=7)
+    b1, b2 = data.batch_at(3), data.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    # learnability: true successor appears among labels far above chance
+    succ = data.succ
+    tok = np.asarray(b1["tokens"]).reshape(-1)
+    lab = np.asarray(b1["labels"]).reshape(-1)
+    hits = np.mean([lab[i] in succ[tok[i]] for i in range(len(tok))])
+    assert hits > 0.5   # chance would be ~8/128 = 0.0625

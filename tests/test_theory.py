@@ -1,0 +1,60 @@
+"""Consistency properties of the Table 1.1/1.2 closed forms."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+W = theory.Workload()
+
+
+@given(st.floats(1e-4, 1e-1), st.integers(2, 256))
+@settings(max_examples=30, deadline=None)
+def test_relaxations_never_beat_baseline_iterations(eps, n):
+    """The paper's §1.3 point: relaxations do NOT improve iteration counts
+    (they improve seconds/iteration)."""
+    base = theory.dist_sgd_iterations(W, eps, n)
+    assert theory.csgd_iterations(W, eps, n) >= base
+    assert theory.ecsgd_iterations(W, eps, n) >= base
+    assert theory.asgd_iterations(W, eps, n) >= base
+    assert theory.dsgd_iterations(W, eps, n, rho=0.9) >= base
+
+
+@given(st.floats(1e-4, 1e-1), st.integers(2, 64))
+@settings(max_examples=30, deadline=None)
+def test_ecsgd_asymptotically_beats_csgd(eps, n):
+    """Thm 3.4.2 vs Eq. 3.6: EC's sigma'/eps^1.5 term < CSGD's
+    sigma'^2/eps^2 term for small eps."""
+    if eps < (W.sigma_c) ** 2:   # regime where the comparison is meaningful
+        assert theory.ecsgd_iterations(W, eps, n) <= \
+            theory.csgd_iterations(W, eps, n)
+
+
+@given(st.integers(2, 512))
+@settings(max_examples=30, deadline=None)
+def test_comm_costs_structure(n):
+    a, b = 1e-3, 1e-2
+    ps = theory.comm_cost_ps(n, a, b)
+    ar = theory.comm_cost_allreduce(n, a, b)
+    dec = theory.comm_cost_decentralized(2, a, b)
+    assert ps >= ar                      # partitioning helps
+    assert dec == pytest.approx(2 * (a + b))   # O(1) in n
+    # compression scales only the bandwidth term
+    c = theory.comm_cost_compressed(n, a, b, eta=0.25)
+    assert c == pytest.approx(2 * n * a + 2 * b * 0.25)
+
+
+def test_more_workers_fewer_iterations():
+    it8 = theory.dist_sgd_iterations(W, 1e-3, 8)
+    it64 = theory.dist_sgd_iterations(W, 1e-3, 64)
+    assert it64 < it8
+
+
+def test_learning_rates_positive_and_shrink_with_T():
+    for fn, args in [(theory.lr_sgd, (W, 100)), (theory.lr_csgd, (W, 100)),
+                     (theory.lr_ecsgd, (W, 100, 8)),
+                     (theory.lr_asgd, (W, 100, 8.0)),
+                     (theory.lr_dsgd, (W, 100, 8, 0.9))]:
+        small = fn(*args)
+        big_args = (args[0], 10_000) + args[2:]
+        big = fn(*big_args)
+        assert 0 < big < small
