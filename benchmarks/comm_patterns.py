@@ -17,8 +17,9 @@ def sweep(size_mb: float = 100.0):
                                                   t_tr=beta)
             ar_nopart = eventsim.ring_allreduce_makespan(
                 n, size_mb, t_lat=alpha, t_tr=beta, partitioned=False)
+            # rq8's measured packed wire format (~4x vs fp32, incl. header)
             csgd = eventsim.ring_allreduce_makespan(
-                n, size_mb, t_lat=alpha, t_tr=beta, compression=4.0)
+                n, size_mb, t_lat=alpha, t_tr=beta, codec="rq8")
             dec = eventsim.decentralized_makespan(n, size_mb, t_lat=alpha,
                                                   t_tr=beta)
             rows.append((n, regime, ps, ar, ar_nopart, csgd, dec))

@@ -9,7 +9,9 @@ derives, per (arch x input-shape) on the single-pod mesh:
 
 plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill/decode), the
 useful-compute ratio MODEL/HLO (catches remat + redundancy waste), the
-dominant bottleneck, and a what-would-move-it note.
+dominant bottleneck, a what-would-move-it note, and the what-if collective
+term under a gradient codec's MEASURED packed wire format
+(repro.core.compression.Codec.wire_bytes — not an abstract bits ratio).
 
 Byte caveat: XLA's `bytes accessed` counts while bodies once; we scale it by
 the dot-FLOPs loop factor (trip-count-aware / body-once) — an approximation
@@ -53,7 +55,24 @@ def model_flops(arch: str, shape_name: str) -> float:
     return 2.0 * n * shape.global_batch          # decode: 1 token/seq
 
 
-def derive(rec: dict) -> dict:
+def compressed_collective_s(coll_bytes: float, codec_name: str, *,
+                            elem_bytes: float = 4.0) -> float:
+    """Collective term if gradient sync shipped `codec_name`'s wire format.
+
+    Uses the MEASURED Codec.wire_bytes of the packed payload (incl. params
+    header and lane padding) for the element count implied by the HLO's
+    collective bytes — not a hand-written bits ratio. `elem_bytes` is the
+    wire dtype of the original collective (4 for fp32, 2 for the bf16
+    programs dryrun compiles).
+    """
+    from repro.core import compression
+
+    n_elements = max(1, int(coll_bytes / elem_bytes))
+    wire = compression.codec(codec_name).wire_bytes_for(n_elements)
+    return wire / ICI_BW
+
+
+def derive(rec: dict, *, grad_codec: Optional[str] = "rq8") -> dict:
     n_dev = rec["n_devices"]
     flops_dev = rec["dot_flops"]                  # per-device (trip-aware)
     body_once = max(rec.get("flops_body_once", 0.0), 1.0)
@@ -79,7 +98,7 @@ def derive(rec: dict) -> dict:
                       "of all-reduce+all-gather, overlap collectives with "
                       "the scan body",
     }[dominant]
-    return {
+    out = {
         "arch": rec["arch"], "shape": rec["shape"],
         "t_compute_s": t_compute, "t_memory_s": t_memory,
         "t_collective_s": t_coll, "dominant": dominant,
@@ -88,6 +107,21 @@ def derive(rec: dict) -> dict:
         "hbm_args_gib": rec["argument_size_in_bytes"] / 2**30,
         "hbm_temp_gib_per_dev": rec["temp_size_in_bytes"] / n_dev / 2**30,
     }
+    if grad_codec is not None:
+        # what-if: gradient compression only touches the reduction traffic
+        # (all-reduce / reduce-scatter); all-gather of params, all-to-all
+        # and permutes keep their fp32/bf16 bytes
+        breakdown = rec["collectives"].get("collective_breakdown", {})
+        reducible = breakdown.get("all-reduce", 0.0) \
+            + breakdown.get("reduce-scatter", 0.0)
+        rest = max(coll_dev - reducible, 0.0)
+        # dryrun compiles the production programs in bf16 (2 B/element)
+        comp = compressed_collective_s(reducible, grad_codec,
+                                       elem_bytes=2.0) \
+            if reducible > 0 else 0.0
+        out["t_collective_compressed_s"] = rest / ICI_BW + comp
+        out["grad_codec"] = grad_codec
+    return out
 
 
 def full_table(mesh: str = "16x16") -> list:
@@ -107,14 +141,17 @@ def main():
               "(run python -m repro.launch.dryrun --all first)")
         return "missing"
     print("# Roofline terms per (arch x shape), single-pod 16x16 "
-          "(seconds/step; v5e constants)")
+          "(seconds/step; v5e constants; coll(rq8) = collective term under "
+          "the measured rq8 packed wire format)")
     print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
-          f"{'collect':>10s} {'dominant':>10s} {'useful':>7s}")
+          f"{'collect':>10s} {'coll(rq8)':>10s} {'dominant':>10s} "
+          f"{'useful':>7s}")
     for r in rows:
         print(f"{r['arch']:24s} {r['shape']:12s} "
               f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
-              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
-              f"{r['useful_ratio']:7.2f}")
+              f"{r['t_collective_s']:10.4f} "
+              f"{r.get('t_collective_compressed_s', 0.0):10.4f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f}")
     dom = {}
     for r in rows:
         dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1

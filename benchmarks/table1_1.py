@@ -41,14 +41,16 @@ def run(n_workers: int = 8, eps: float = 5e-3, steps: int = 800,
         "DSGD": parallel.run_quadratic("dsgd", n_workers=n_workers,
                                        steps=steps, lr=0.1),
     }
-    eta = 0.125  # rq4 / fp32
+    # message sizes come from the MEASURED codec wire format (packed
+    # payload + params header), not a hand-written eta — see
+    # repro.core.compression.Codec.wire_bytes
     comm = {
         "mb-SGD": eventsim.ring_allreduce_makespan(
             n_workers, size_mb, t_lat=alpha, t_tr=beta),
         "CSGD": eventsim.ring_allreduce_makespan(
-            n_workers, size_mb, t_lat=alpha, t_tr=beta, compression=1 / eta),
+            n_workers, size_mb, t_lat=alpha, t_tr=beta, codec="rq4"),
         "EC-SGD": eventsim.ring_allreduce_makespan(
-            n_workers, size_mb, t_lat=alpha, t_tr=beta, compression=32.0),
+            n_workers, size_mb, t_lat=alpha, t_tr=beta, codec="sign1"),
         "ASGD": eventsim.single_ps_makespan(
             n_workers, size_mb, t_lat=alpha, t_tr=beta) / n_workers,
         "DSGD": eventsim.decentralized_makespan(
@@ -63,17 +65,19 @@ def run(n_workers: int = 8, eps: float = 5e-3, steps: int = 800,
     }
     for name in empirical:
         it = iterations_to_eps(empirical[name], eps)
-        rows.append((name, analytic[name], it, comm[name]))
+        rows.append((name, analytic[name], it, comm[name],
+                     empirical[name].comm_bytes_per_step))
     return rows
 
 
 def main():
     print("# Table 1.1 — iterations to eps + comm cost per iteration")
     print(f"{'algorithm':10s} {'analytic_iters(arb)':>20s} "
-          f"{'empirical_iters':>16s} {'comm_cost(s)':>14s}")
+          f"{'empirical_iters':>16s} {'comm_cost(s)':>14s} "
+          f"{'wire_B/step':>12s}")
     derived = []
-    for name, ana, emp, comm in run():
-        print(f"{name:10s} {ana:20.1f} {emp:16d} {comm:14.4f}")
+    for name, ana, emp, comm, wire_b in run():
+        print(f"{name:10s} {ana:20.1f} {emp:16d} {comm:14.4f} {wire_b:12.0f}")
         derived.append(f"{name}:it={emp}")
     return ",".join(derived)
 

@@ -12,9 +12,18 @@ compression randomness, per-worker error state, exact update rules.
   DelayedExchange    Assumption 5 bounded staleness (tau)   wraps any exchange
   GossipMix          Eq. (5.2)  X <- (X - gamma G) W        ppermute ring / pmean
 
-The production (pjit) tier reuses the same compression registry but applies it
-to the device-owned gradient shard (multi-server-PS view: devices ARE the
-servers of their FSDP partition); see train/steps.py and DESIGN.md §2.
+Compression is obtained from the Codec registry (repro.core.compression).
+Where the algebra permits — the ring's hop-to-hop handoff — the *packed*
+wire object (uint8 payload + params) moves through ``ppermute``, so the
+byte savings are real on device; where a summation needs fp32 (the PS
+pmean) we fall back to the fused qdq, which is bit-identical to
+decode(encode(.)) for the packable codecs. Every exchange reports its
+measured per-iteration wire bytes via ``message_bytes`` (consumed by
+eventsim / table1_1).
+
+The production (pjit) tier reuses the same codec registry on the
+device-owned gradient shard (multi-server-PS view: devices ARE the
+servers of their FSDP partition); see train/steps.py.
 """
 from __future__ import annotations
 
@@ -38,6 +47,30 @@ def _worker_key(key: jax.Array, axis_name: str) -> jax.Array:
     return jax.random.fold_in(key, lax.axis_index(axis_name))
 
 
+def _axis_size(axis_name: str):
+    """Static size of a named axis (psum of a unit literal is constant-
+    folded to a Python int under vmap/pmap/shard_map)."""
+    return lax.psum(1, axis_name)
+
+
+def _tree_ppermute(tree, axis_name: str, perm):
+    """ppermute every array leaf of a pytree (incl. Packed wire objects)."""
+    return jax.tree_util.tree_map(
+        lambda a: lax.ppermute(a, axis_name, perm), tree)
+
+
+def _fp32_bytes(tree) -> float:
+    """Uncompressed fp32 wire bytes of one message (via the 'none' codec
+    so all byte accounting flows through the registry)."""
+    return compression.codec("none").tree_wire_bytes(tree)
+
+
+# `message_bytes(tree, n_workers=...)` on every exchange reports the wire
+# bytes ONE worker sends per iteration under the exchange's native
+# pattern — the quantity RunResult.comm_bytes_per_step and table1_1's
+# wire_B/step column print.
+
+
 @dataclasses.dataclass(frozen=True)
 class MbSGDExchange:
     """Synchronous data-parallel baseline: exact mean of worker gradients."""
@@ -51,6 +84,12 @@ class MbSGDExchange:
                  axis_name: str) -> tuple[PyTree, PyTree]:
         return lax.pmean(grad, axis_name), state
 
+    def message_bytes(self, tree, *, n_workers: int = 1) -> float:
+        """Uplink + broadcast share, fp32 — same multi-server-PS
+        convention as the compressed exchanges so the columns compare."""
+        del n_workers
+        return 2.0 * _fp32_bytes(tree)
+
 
 @dataclasses.dataclass(frozen=True)
 class CSGDPSExchange:
@@ -59,6 +98,11 @@ class CSGDPSExchange:
     Workers quantize independently (per-worker key); the server's outgoing
     compression uses a key shared by all workers so the broadcast value is
     identical everywhere (it is one physical message in the paper).
+
+    The server-side mean needs fp32 arithmetic, so both directions use the
+    fused qdq (identical bits to a decode(encode(.)) round trip); the
+    measured wire cost of the packed payload is still what
+    ``message_bytes`` reports.
     """
 
     compressor: str = "rq8"
@@ -68,12 +112,19 @@ class CSGDPSExchange:
         return ()
 
     def __call__(self, grad, state, key, *, axis_name):
-        q_fn, _ = compression.get(self.compressor)
+        cdc = compression.codec(self.compressor)
         wkey = _worker_key(key, axis_name)
-        local_q = compression.tree_compress(grad, wkey, q_fn)
+        local_q = cdc.tree_qdq(grad, wkey)
         mean_q = lax.pmean(local_q, axis_name)
-        out = compression.tree_compress(mean_q, jax.random.fold_in(key, 0x5E4E4), q_fn)
+        out = cdc.tree_qdq(mean_q, jax.random.fold_in(key, 0x5E4E4))
         return out, state
+
+    def message_bytes(self, tree, *, n_workers: int = 1) -> float:
+        """One worker->server message + this worker's share of the
+        broadcast (in the multi-server view each worker also serves its
+        partition of the outgoing message, one partition per peer)."""
+        del n_workers
+        return 2.0 * compression.codec(self.compressor).tree_wire_bytes(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +135,13 @@ class CSGDRingExchange:
     worker holds Q(..Q(Q(g_{i+1}) + g_{i+2}).. + g_i) — each worker ends with
     a different nesting order, exactly like the per-partition chains of the
     paper's Figure 3.3.
+
+    For packable codecs the hop handoff moves the PACKED wire object
+    (uint8 payload + params header) through ppermute — the collective
+    really ships bits/element = codec bits, not fp32 — and the hop
+    arithmetic decodes, adds the local gradient, and re-encodes. Because
+    decode(encode(x, k)) == qdq(x, k) bit-for-bit, this is numerically
+    identical to the qdq formulation used for non-packable codecs.
     """
 
     compressor: str = "rq8"
@@ -93,21 +151,38 @@ class CSGDRingExchange:
         return ()
 
     def __call__(self, grad, state, key, *, axis_name):
-        q_fn, _ = compression.get(self.compressor)
-        n = lax.axis_size(axis_name)
+        cdc = compression.codec(self.compressor)
+        n = _axis_size(axis_name)
         perm = [(i, (i + 1) % n) for i in range(n)]
         wkey = _worker_key(key, axis_name)
 
-        acc = compression.tree_compress(grad, wkey, q_fn)
+        if cdc.packable and isinstance(n, int) and n > 1:
+            acc = cdc.tree_encode(grad, wkey)
 
-        def hop(h, acc):
-            shifted = lax.ppermute(acc, axis_name, perm)
-            summed = _tree_map2(lambda a, g: a + g, shifted, grad)
-            hop_key = jax.random.fold_in(wkey, h)
-            return compression.tree_compress(summed, hop_key, q_fn)
+            def hop(h, acc):
+                shifted = _tree_ppermute(acc, axis_name, perm)
+                summed = _tree_map2(lambda a, g: a + g,
+                                    cdc.tree_decode(shifted), grad)
+                return cdc.tree_encode(summed, jax.random.fold_in(wkey, h))
 
-        acc = lax.fori_loop(1, n, hop, acc) if isinstance(n, int) and n > 1 else acc
-        return jax.tree_util.tree_map(lambda a: a / n, acc), state
+            acc = lax.fori_loop(1, n, hop, acc)
+            out = cdc.tree_decode(acc)
+        else:
+            out = cdc.tree_qdq(grad, wkey)
+
+            def hop_qdq(h, acc):
+                shifted = lax.ppermute(acc, axis_name, perm)
+                summed = _tree_map2(lambda a, g: a + g, shifted, grad)
+                return cdc.tree_qdq(summed, jax.random.fold_in(wkey, h))
+
+            if isinstance(n, int) and n > 1:
+                out = lax.fori_loop(1, n, hop_qdq, out)
+        return jax.tree_util.tree_map(lambda a: a / n, out), state
+
+    def message_bytes(self, tree, *, n_workers: int = 2) -> float:
+        """n-1 hops per iteration, one packed payload sent per hop."""
+        per_hop = compression.codec(self.compressor).tree_wire_bytes(tree)
+        return max(n_workers - 1, 1) * per_hop
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,8 +191,9 @@ class ECSGDExchange:
 
     Worker side:  v_n = g_n + delta_n ; send Q(v_n) ; delta_n = v_n - Q(v_n)
     Server side:  v = mean_n Q(v_n) + delta ; bcast Q(v) ; delta = v - Q(v)
-    Works with ANY compressor, biased ones included (Section 3.3); tested via
-    Lemma 3.4.1's x_tilde recursion.
+    Works with ANY codec, biased ones included (Section 3.3); tested via
+    Lemma 3.4.1's x_tilde recursion. Both sides need the dequantized value
+    for the error recursion, so this uses the fused qdq throughout.
     """
 
     compressor: str = "sign1"
@@ -128,18 +204,23 @@ class ECSGDExchange:
         return {"worker_err": z, "server_err": z}
 
     def __call__(self, grad, state, key, *, axis_name):
-        q_fn, _ = compression.get(self.compressor)
+        cdc = compression.codec(self.compressor)
         wkey = _worker_key(key, axis_name)
         # worker side (Eqs. 3.8-3.9)
         v_n = _tree_map2(lambda g, d: g + d, grad, state["worker_err"])
-        q_n = compression.tree_compress(v_n, wkey, q_fn)
+        q_n = cdc.tree_qdq(v_n, wkey)
         new_worker_err = _tree_map2(lambda v, q: v - q, v_n, q_n)
         # server side (Eqs. 3.10-3.11); shared key -> identical on all workers
         v = _tree_map2(lambda m, d: m + d, lax.pmean(q_n, axis_name),
                        state["server_err"])
-        out = compression.tree_compress(v, jax.random.fold_in(key, 0x5E4E4), q_fn)
+        out = cdc.tree_qdq(v, jax.random.fold_in(key, 0x5E4E4))
         new_server_err = _tree_map2(lambda a, b: a - b, v, out)
         return out, {"worker_err": new_worker_err, "server_err": new_server_err}
+
+    def message_bytes(self, tree, *, n_workers: int = 1) -> float:
+        """As CSGDPSExchange: worker->server + broadcast share."""
+        del n_workers
+        return 2.0 * compression.codec(self.compressor).tree_wire_bytes(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +259,9 @@ class DelayedExchange:
         return stale, {"inner": inner_state, "buffer": buf,
                        "head": (head + 1) % self.tau}
 
+    def message_bytes(self, tree, *, n_workers: int = 1) -> float:
+        return self.inner.message_bytes(tree, n_workers=n_workers)
+
 
 @dataclasses.dataclass(frozen=True)
 class GossipMix:
@@ -194,7 +278,7 @@ class GossipMix:
     name: str = "gossip"
 
     def __call__(self, params: PyTree, *, axis_name: str) -> PyTree:
-        n = lax.axis_size(axis_name)
+        n = _axis_size(axis_name)
         if self.topology == "full":
             return lax.pmean(params, axis_name)
         if self.topology != "ring":
@@ -212,6 +296,14 @@ class GossipMix:
             return (x + xr + xl) / 3.0
 
         return jax.tree_util.tree_map(mix, params)
+
+    def message_bytes(self, tree, *, n_workers: int = 3) -> float:
+        """Full fp32 model to each neighbor: 2 sends on the ring (both
+        directions), n-1 under the fully-connected W1."""
+        degree = 2 if self.topology == "ring" else max(n_workers - 1, 1)
+        if self.topology == "ring" and n_workers == 2:
+            degree = 1   # both neighbors are the same worker
+        return degree * _fp32_bytes(tree)
 
 
 EXCHANGES: dict[str, Callable[..., Any]] = {

@@ -1,19 +1,40 @@
-"""Lossy compression operators Q(.) from Section 3 of the paper.
+"""Lossy compression codecs Q(.) from Section 3 of the paper.
 
-Each operator acts on a single jnp array (communicators map them over pytrees).
-Unbiased operators satisfy E[Q(x)] = x (Assumption 3); every operator also
-reports its wire-format cost so the event simulator / roofline collective term
-can account for the actual bytes moved (compression changes *transfer time*,
-never latency — Figure 3.4/3.5).
+The central abstraction is the **Codec**: one object per operator owning
 
-All randomness is explicit (jax.random keys) so runs are reproducible and the
-operators are usable inside jit/shard_map.
+  encode(x, key)  -> Packed     the wire object (uint8 payload + params)
+  decode(packed)  -> x_hat      dequantize a wire object
+  qdq(x, key)     -> x_hat      fused encode+decode (what update rules eat)
+  wire_bytes(x)   -> float      MEASURED bytes of encode(x)'s arrays
+
+For the quantizer family (rq8/rq4/rq2) encode really packs sub-byte
+codes into a uint8 payload (kernels/quant: Pallas on TPU, jnp reference
+elsewhere) and `decode(encode(x, key)) == qdq(x, key)` bit-for-bit, so
+communicators can ship the Packed payload through collectives whenever
+the algebra allows (ring hops) and fall back to qdq where a summation
+needs fp32 (PS reduce) without changing the math. Operators with no
+packed implementation yet (sparsifiers, sign, clipping) are qdq-only
+codecs: `packable` is False and wire_bytes comes from the static spec.
+
+`CompressionSpec` remains the static metadata *inside* each codec; the
+cost-model consumers (eventsim / roofline / table1_1 / comm_patterns)
+take `Codec.wire_bytes(...)`, which for packable codecs is measured from
+the actual payload shapes (eval_shape — no compute), so every downstream
+byte count traces to the real wire format.
+
+Unbiased operators satisfy E[Q(x)] = x (Assumption 3); every operator
+reports its wire-format cost so the event simulator / roofline collective
+term can account for the actual bytes moved (compression changes
+*transfer time*, never latency — Figure 3.4/3.5).
+
+All randomness is explicit (jax.random keys) so runs are reproducible and
+the operators are usable inside jit/shard_map.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +72,167 @@ class CompressionSpec:
 
 
 # ---------------------------------------------------------------------------
-# Operators. Each returns the *dequantized* array (same shape/dtype as input):
-# the algorithmic effect of Q is fully captured; the wire format is captured
-# by CompressionSpec. kernels/quant provides the packed TPU implementation.
+# The wire object
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Packed:
+    """A compressed message as it would travel on the wire.
+
+    payload: uint8 array of packed codes (the bulk bytes).
+    params:  small fp32 array of dequantization params (the header).
+    shape/dtype: static metadata to restore the original leaf.
+    codec:   registry name of the codec that produced it.
+
+    Registered as a pytree whose children are (payload, params), so a
+    Packed (or a tree of them) moves through ``lax.ppermute``, ``vmap``
+    and ``lax.fori_loop`` carries like any other array bundle.
+    """
+
+    payload: jnp.ndarray
+    params: jnp.ndarray
+    shape: tuple
+    dtype: Any
+    codec: str
+
+    def tree_flatten(self):
+        return (self.payload, self.params), (self.shape, self.dtype,
+                                             self.codec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Measured size: payload bytes + header (params) bytes."""
+        payload = self.payload.size * jnp.dtype(self.payload.dtype).itemsize
+        header = self.params.size * jnp.dtype(self.params.dtype).itemsize
+        return int(payload + header)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """One compression operator: packed wire format + fused qdq.
+
+    Subclasses set `spec` and implement `qdq`; packable codecs also
+    implement `encode`/`decode` with decode(encode(x, k)) == qdq(x, k).
+    """
+
+    spec: CompressionSpec
+    packable: bool = False
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    # -- single leaf ------------------------------------------------------
+
+    def qdq(self, x: jnp.ndarray, key: Optional[jax.Array]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def encode(self, x: jnp.ndarray, key: Optional[jax.Array]) -> Packed:
+        raise NotImplementedError(
+            f"codec '{self.name}' has no packed wire format; use qdq")
+
+    def decode(self, packed: Packed) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"codec '{self.name}' has no packed wire format; use qdq")
+
+    def wire_bytes(self, x) -> float:
+        """Measured wire bytes for one leaf (array / ShapeDtypeStruct)."""
+        if not self.packable:
+            return self.spec.compressed_bytes(x.size)
+        leaf = jax.ShapeDtypeStruct(x.shape, getattr(x, "dtype", jnp.float32))
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        out = jax.eval_shape(self.encode, leaf, key)
+        return float(out.wire_bytes)
+
+    def wire_bytes_for(self, n_elements: int) -> float:
+        """Measured wire bytes for a flat fp32 message of n elements."""
+        return self.wire_bytes(
+            jax.ShapeDtypeStruct((int(n_elements),), jnp.float32))
+
+    # -- pytrees ----------------------------------------------------------
+
+    def tree_qdq(self, tree, key: jax.Array):
+        return tree_compress(tree, key, self.qdq)
+
+    def tree_encode(self, tree, key: jax.Array):
+        """Leaf-wise encode with independent keys -> tree of Packed."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = [self.encode(leaf, k) for leaf, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def tree_decode(self, tree):
+        """Inverse of tree_encode (tree of Packed -> tree of arrays)."""
+        return jax.tree_util.tree_map(
+            self.decode, tree, is_leaf=lambda n: isinstance(n, Packed))
+
+    def tree_wire_bytes(self, tree) -> float:
+        return sum(self.wire_bytes(leaf)
+                   for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class QuantCodec(Codec):
+    """Randomized uniform quantization, Eq. (3.1) + Figure 3.1, with the
+    packed sub-byte wire format from kernels/quant.
+
+    backend: 'auto' (Pallas on TPU, jnp reference elsewhere), 'pallas',
+    or 'jnp' — both produce identical bits for the same key.
+    """
+
+    packable = True
+
+    def __init__(self, bits: int, *, backend: str = "auto"):
+        self.bits = bits
+        self.backend = backend
+        self.spec = CompressionSpec(f"rq{bits}", True, float(bits))
+
+    def qdq(self, x, key):
+        from repro.kernels.quant import ops
+        return ops.quantize_dequantize(x, key, bits=self.bits,
+                                       backend=self.backend)
+
+    def encode(self, x, key) -> Packed:
+        from repro.kernels.quant import ops
+        payload, params = ops.encode(x, key, bits=self.bits,
+                                     backend=self.backend)
+        return Packed(payload, params, tuple(x.shape), x.dtype, self.name)
+
+    def decode(self, packed: Packed):
+        from repro.kernels.quant import ops
+        return ops.decode(packed.payload, packed.params,
+                          shape=packed.shape, bits=self.bits,
+                          dtype=packed.dtype, backend=self.backend)
+
+
+class QdqCodec(Codec):
+    """Adapter for operators without a packed wire format (yet): the
+    algorithmic effect of Q is fully captured by `fn`; the wire cost comes
+    from the static spec."""
+
+    packable = False
+
+    def __init__(self, fn: Callable, spec: CompressionSpec):
+        self._fn = fn
+        self.spec = spec
+
+    def qdq(self, x, key=None):
+        return self._fn(x, key)
+
+
+# ---------------------------------------------------------------------------
+# Operators. Each returns the *dequantized* array (same shape/dtype as
+# input). These remain available as plain functions; the registry wraps
+# them into codecs.
 # ---------------------------------------------------------------------------
 
 
@@ -62,7 +241,8 @@ def randomized_quantize(x: jnp.ndarray, key: jax.Array, *, bits: int = 8) -> jnp
 
     Knobs c_i are uniform on [min(x), max(x)]; each element rounds to the
     bracketing knob with probability proportional to proximity, making
-    E[Q(x)] = x elementwise.
+    E[Q(x)] = x elementwise. (Reference formulation on the original
+    layout; QuantCodec routes through the packed kernels instead.)
     """
     x32 = x.astype(jnp.float32)
     lo = jnp.min(x32)
@@ -122,22 +302,38 @@ def identity(x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
     return x
 
 
-# name -> (fn(x, key) -> x_hat, CompressionSpec)
-REGISTRY: dict[str, tuple[Callable, CompressionSpec]] = {
-    "none": (identity, CompressionSpec("none", True, 32.0, overhead_bytes=0)),
-    "rq8": (partial(randomized_quantize, bits=8), CompressionSpec("rq8", True, 8.0)),
-    "rq4": (partial(randomized_quantize, bits=4), CompressionSpec("rq4", True, 4.0)),
-    "rq2": (partial(randomized_quantize, bits=2), CompressionSpec("rq2", True, 2.0)),
-    "rand_sparse_10": (
+# ---------------------------------------------------------------------------
+# Registry: name -> Codec (the only compression entry point for
+# communicators, train steps, eventsim, and benchmarks).
+# ---------------------------------------------------------------------------
+
+CODECS: dict[str, Codec] = {
+    "none": QdqCodec(identity,
+                     CompressionSpec("none", True, 32.0, overhead_bytes=0)),
+    "rq8": QuantCodec(8),
+    "rq4": QuantCodec(4),
+    "rq2": QuantCodec(2),
+    "rand_sparse_10": QdqCodec(
         partial(randomized_sparsify, p=0.1),
-        CompressionSpec("rand_sparse_10", True, 32.0, density=0.1),
-    ),
-    "topk_1": (
-        partial(topk_sparsify, frac=0.01),
-        CompressionSpec("topk_1", False, 32.0, density=0.01),
-    ),
-    "sign1": (onebit_sign, CompressionSpec("sign1", False, 1.0)),
-    "clip16": (clip_lowbits, CompressionSpec("clip16", False, 16.0)),
+        CompressionSpec("rand_sparse_10", True, 32.0, density=0.1)),
+    "topk_1": QdqCodec(partial(topk_sparsify, frac=0.01),
+                       CompressionSpec("topk_1", False, 32.0, density=0.01)),
+    "sign1": QdqCodec(onebit_sign, CompressionSpec("sign1", False, 1.0)),
+    "clip16": QdqCodec(clip_lowbits, CompressionSpec("clip16", False, 16.0)),
+}
+
+
+def codec(name: str) -> Codec:
+    if name not in CODECS:
+        raise KeyError(f"unknown compression '{name}'; have {sorted(CODECS)}")
+    return CODECS[name]
+
+
+# Legacy view: name -> (fn(x, key) -> x_hat, CompressionSpec). Kept ONLY so
+# existing tests/notebooks can grab the raw operator; production call sites
+# go through codec() and never handle (fn, spec) tuples themselves.
+REGISTRY: dict[str, tuple[Callable, CompressionSpec]] = {
+    name: (c.qdq, c.spec) for name, c in CODECS.items()
 }
 
 
@@ -156,5 +352,8 @@ def tree_compress(tree, key: jax.Array, fn: Callable) -> tuple:
 
 
 def tree_bytes(tree, spec: CompressionSpec) -> float:
-    """Total wire bytes for a pytree message under `spec`."""
+    """Total wire bytes for a pytree message under a static `spec`.
+
+    Prefer Codec.tree_wire_bytes (measured) — this remains for spec-only
+    arithmetic."""
     return sum(spec.compressed_bytes(leaf.size) for leaf in jax.tree_util.tree_leaves(tree))

@@ -7,7 +7,7 @@ Model (Figure 1.2):
     time, and may do one send and one receive concurrently;
   * moving one unit (MB) takes t_tr seconds at the worker NIC.
 
-Semantics used here (documented in DESIGN.md — the paper's Figure 1.3 is not
+Semantics used here (documented in README.md — the paper's Figure 1.3 is not
 fully specified by its text): a message holds its sender's send-port AND its
 receiver's recv-port for the full (t_lat + size * t_tr) duration, and a message
 begins only when both ports are free. This reproduces every closed form the
@@ -21,6 +21,14 @@ paper states:
   K-times compression: divides every t_tr term by K, latency unchanged
                                                        (Figures 3.4/3.5)
 
+Message sizes can be taken from the *measured* wire format instead of an
+abstract ratio: every pattern builder accepts ``codec='rq4'`` (a name from
+repro.core.compression's Codec registry) and then replaces `size` — read
+as the uncompressed fp32 message MB — with ``Codec.wire_bytes`` of the
+actual packed payload for that element count (including the params header
+and the pad-to-lane-granule overhead). The scalar ``compression=K`` knob
+remains for the paper's closed-form sweeps.
+
 Example 1.3.2's "14 vs 9 units" figure reads one unit differently than these
 semantics (we get 13 vs 8) but the *saving* — exactly the halved transfer
 time, latency untouched — matches; asserted in tests.
@@ -28,7 +36,7 @@ time, latency untouched — matches; asserted in tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,11 +121,30 @@ def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
+def wire_size_mb(codec: str, n_elements: int) -> float:
+    """MEASURED wire MB of one message of n_elements fp32 values under
+    `codec` (payload + params header of the actual packed arrays)."""
+    from repro.core import compression   # lazy: keep eventsim jax-free
+
+    return compression.codec(codec).wire_bytes_for(n_elements) / 1e6
+
+
+def _msg_mb(size: float, compression: float, codec: Optional[str],
+            n_chunks: int = 1) -> float:
+    """One chunk's wire MB: `size` MB of fp32 split into n_chunks, shipped
+    under `codec` (measured) or divided by the scalar `compression`."""
+    if codec is not None:
+        n_el = size * 1e6 / 4.0 / n_chunks
+        return wire_size_mb(codec, max(1, int(n_el)))
+    return size / n_chunks / compression
+
+
 def single_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
-                       compression: float = 1.0) -> float:
+                       compression: float = 1.0,
+                       codec: Optional[str] = None) -> float:
     """Simulated PS makespan with the broadcast gated on aggregation."""
     ps = n
-    s = size / compression
+    s = _msg_mb(size, compression, codec)
     up = simulate([Msg(0.0, w, ps, s, "agg") for w in range(n)],
                   t_lat=t_lat, t_tr=t_tr)
     t_sum = up.makespan
@@ -127,7 +154,8 @@ def single_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
 
 
 def ring_allreduce_msgs(n: int, size: float, *, partitioned: bool = True,
-                        compression: float = 1.0) -> list[Msg]:
+                        compression: float = 1.0,
+                        codec: Optional[str] = None) -> list[Msg]:
     """§1.3.3: reduce-scatter + all-gather on a logical ring.
 
     partitioned=True: model split into n chunks (the paper's key design
@@ -135,14 +163,14 @@ def ring_allreduce_msgs(n: int, size: float, *, partitioned: bool = True,
     """
     msgs: list[Msg] = []
     if partitioned:
-        chunk = size / n / compression
+        chunk = _msg_mb(size, compression, codec, n_chunks=n)
         rounds = 2 * (n - 1)
         for r in range(rounds):
             phase = "reduce" if r < n - 1 else "gather"
             for w in range(n):
                 msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"{phase}{r}"))
     else:
-        chunk = size / compression
+        chunk = _msg_mb(size, compression, codec)
         # one token circles the ring twice (2(n-1) sequential hops); model as
         # chained requests via tags — simulate() serializes on ports anyway
         for r in range(2 * (n - 1)):
@@ -153,40 +181,40 @@ def ring_allreduce_msgs(n: int, size: float, *, partitioned: bool = True,
 
 def ring_allreduce_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
                             partitioned: bool = True,
-                            compression: float = 1.0) -> float:
+                            compression: float = 1.0,
+                            codec: Optional[str] = None) -> float:
     """Round-synchronous ring AllReduce makespan.
 
     Each of the 2(n-1) rounds moves one chunk per worker concurrently
     (every worker sends one + receives one, allowed by the model), so a round
     costs t_lat + chunk * t_tr.
     """
-    if partitioned:
-        chunk = size / n / compression
-        return 2 * (n - 1) * (t_lat + chunk * t_tr)
-    chunk = size / compression
+    chunk = _msg_mb(size, compression, codec, n_chunks=n if partitioned else 1)
     return 2 * (n - 1) * (t_lat + chunk * t_tr)
 
 
 def multi_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
-                      compression: float = 1.0) -> float:
+                      compression: float = 1.0,
+                      codec: Optional[str] = None) -> float:
     """§1.3.4: every worker hosts 1/n of the model; same cost as ring AR.
 
     Phase 1: n-1 incoming shards per server, perfectly staggered (Example
     1.3.4) -> (n-1)(t_lat + chunk t_tr); phase 2 symmetric.
     """
-    chunk = size / n / compression
+    chunk = _msg_mb(size, compression, codec, n_chunks=n)
     return 2 * (n - 1) * (t_lat + chunk * t_tr)
 
 
 def decentralized_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
-                           degree: int = 2, compression: float = 1.0) -> float:
+                           degree: int = 2, compression: float = 1.0,
+                           codec: Optional[str] = None) -> float:
     """§5.1: each worker exchanges its FULL model with `degree` neighbors.
 
     Sends serialize at each worker's send port -> degree * (t_lat + size t_tr),
     = 2 t_lat + 2 t_tr for the ring (paper's closed form).
     """
     del n
-    return degree * (t_lat + (size / compression) * t_tr)
+    return degree * (t_lat + _msg_mb(size, compression, codec) * t_tr)
 
 
 def async_ps_timeline(n: int, *, t_compute: Sequence[float], t_lat: float,

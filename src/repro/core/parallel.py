@@ -30,6 +30,9 @@ class RunResult:
     grad_norms: jnp.ndarray    # (steps,) ||f'(x_bar)||^2 (the paper's metric)
     params: PyTree             # final per-worker params, leading axis N
     consensus: jnp.ndarray     # (steps,) mean ||x_n - x_bar||^2 (DSGD Lemma 5.2.4)
+    comm_bytes_per_step: float = 0.0   # measured wire bytes one worker puts
+                                       # on the wire per iteration (codec-
+                                       # measured; see Codec.wire_bytes)
 
 
 def _broadcast(params: PyTree, n: int) -> PyTree:
@@ -97,7 +100,12 @@ def run_distributed(
 
     (params_w, _), (losses, gnorms, cons) = lax.scan(
         scan_body, (params_w, ex_state_w), jnp.arange(steps))
-    return RunResult(losses, gnorms, params_w, cons)
+    comm = 0.0
+    if hasattr(exchange, "message_bytes"):
+        comm += float(exchange.message_bytes(params0, n_workers=n_workers))
+    if gossip is not None:
+        comm += float(gossip.message_bytes(params0, n_workers=n_workers))
+    return RunResult(losses, gnorms, params_w, cons, comm)
 
 
 # ---------------------------------------------------------------------------

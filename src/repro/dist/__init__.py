@@ -1,0 +1,1 @@
+"""Distribution utilities: sharding rules for params, batches, and caches."""

@@ -1,19 +1,29 @@
-"""Pallas TPU kernel: fused stochastic quantize-dequantize (Eq. 3.1).
+"""Pallas TPU kernels: fused stochastic quantize-dequantize (Eq. 3.1) and
+the packed wire-format encode/decode pair.
 
 Layout/tiling rationale (TPU v5e):
   * the array is viewed as (R, C) with C a multiple of 128 (lane width);
     the wrapper pads/reshapes arbitrary tensors into this layout;
-  * grid over row-tiles; each step holds a (BLOCK_R, C) fp32 tile of x and
-    of the pre-drawn uniforms in VMEM (x + u + out = 3 tiles; BLOCK_R is
-    chosen in ops.py so 3 * BLOCK_R * C * 4B stays well under ~16 MB VMEM);
-  * (lo, scale) arrive as a (1, 2) SMEM operand (global-scale quantization —
+  * grid over row-tiles; BLOCK_R is chosen in ops.py per kernel from the
+    actual resident operand dtypes so VMEM stays under budget;
+  * (lo, scale) arrive as a (1, 2) operand (global-scale quantization —
     min/max is a cheap jnp reduction outside the kernel);
   * pure VPU elementwise work, no MXU; stochastic rounding compares the
     uniform draw against the fractional part.
 
-Encode emits int8 codes (the wire format whose byte count feeds the
-roofline collective term); the fused qdq variant returns the dequantized
-values directly (what CSGD's update rule consumes).
+Wire format (sub-byte packing): for b-bit codes, pack = 8 // b codes share
+one uint8. The wrapper views the padded flat input as (pack, R, C) — pack
+contiguous *segments* — and the encode kernel folds the segments'
+codes into one (R, C) uint8 payload:
+
+    payload[r, c] = sum_k codes[k, r, c] << (k * b)
+
+Segment packing (rather than packing adjacent lanes) keeps every kernel
+access a full aligned (BLOCK_R, C) tile — no cross-lane shuffles — so the
+same kernel body serves b in {8, 4, 2} (pack in {1, 2, 4}). The decode
+kernel runs a (pack, n_row_tiles) grid, extracting field k = program_id(0)
+of each payload tile. The payload IS the wire array: its byte count is
+what communicators ship and what the roofline/eventsim consume.
 """
 from __future__ import annotations
 
@@ -24,36 +34,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _quantize(x, u, lo, scale, levels: int):
+    """Shared stochastic-rounding body: fp32 in, fp32 integer codes out."""
+    norm = (x.astype(jnp.float32) - lo) / scale
+    floor = jnp.floor(norm)
+    frac = norm - floor
+    q = floor + (u < frac).astype(jnp.float32)
+    return jnp.clip(q, 0.0, float(levels))
+
+
 def _qdq_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
     lo = params_ref[0, 0]
     scale = params_ref[0, 1]
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...]
-    norm = (x - lo) / scale
-    floor = jnp.floor(norm)
-    frac = norm - floor
-    q = floor + (u < frac).astype(jnp.float32)
-    q = jnp.clip(q, 0.0, float(levels))
+    q = _quantize(x_ref[...], u_ref[...], lo, scale, levels)
     o_ref[...] = (q * scale + lo).astype(o_ref.dtype)
 
 
-def _encode_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
+def _encode_packed_kernel(params_ref, x_ref, u_ref, o_ref, *, bits: int):
+    """x_ref, u_ref: (pack, BLOCK_R, C) — all segments of one row tile."""
+    pack = 8 // bits
+    levels = (1 << bits) - 1
     lo = params_ref[0, 0]
     scale = params_ref[0, 1]
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...]
-    norm = (x - lo) / scale
-    floor = jnp.floor(norm)
-    frac = norm - floor
-    q = floor + (u < frac).astype(jnp.float32)
-    o_ref[...] = jnp.clip(q, 0.0, float(levels)).astype(jnp.uint8)
+    acc = None
+    for k in range(pack):
+        q = _quantize(x_ref[k], u_ref[k], lo, scale, levels)
+        q = q.astype(jnp.int32) << (k * bits)
+        acc = q if acc is None else acc | q
+    o_ref[...] = acc.astype(jnp.uint8)
 
 
-def _decode_kernel(params_ref, c_ref, o_ref):
+def _decode_packed_kernel(params_ref, c_ref, o_ref, *, bits: int):
+    k = pl.program_id(0)
     lo = params_ref[0, 0]
     scale = params_ref[0, 1]
-    o_ref[...] = (c_ref[...].astype(jnp.float32) * scale + lo).astype(
-        o_ref.dtype)
+    mask = (1 << bits) - 1
+    field = (c_ref[...].astype(jnp.int32) >> (k * bits)) & mask
+    o_ref[0] = (field.astype(jnp.float32) * scale + lo).astype(o_ref.dtype)
 
 
 def qdq(x: jnp.ndarray, u: jnp.ndarray, params: jnp.ndarray, *, bits: int,
@@ -75,35 +92,41 @@ def qdq(x: jnp.ndarray, u: jnp.ndarray, params: jnp.ndarray, *, bits: int,
     )(params, x, u)
 
 
-def encode(x: jnp.ndarray, u: jnp.ndarray, params: jnp.ndarray, *, bits: int,
-           block_r: int, interpret: bool) -> jnp.ndarray:
-    r, c = x.shape
-    kernel = functools.partial(_encode_kernel, levels=(1 << bits) - 1)
+def encode_packed(x3: jnp.ndarray, u3: jnp.ndarray, params: jnp.ndarray, *,
+                  bits: int, block_r: int, interpret: bool) -> jnp.ndarray:
+    """x3, u3: (pack, R, C) segments; returns the (R, C) uint8 payload."""
+    pack, r, c = x3.shape
+    assert pack == 8 // bits, (pack, bits)
+    kernel = functools.partial(_encode_packed_kernel, bits=bits)
+    # one (pack, BLOCK_R, C) block per grid step: every segment's tile of
+    # the same rows is resident together (pack * BLOCK_R * C fp32 each for
+    # x and u — ops.py budgets BLOCK_R accordingly)
+    seg_spec = pl.BlockSpec((pack, block_r, c), lambda i: (0, i, 0))
     return pl.pallas_call(
         kernel,
         grid=(pl.cdiv(r, block_r),),
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
-        ],
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0)), seg_spec,
+                  seg_spec],
         out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.uint8),
         interpret=interpret,
-    )(params, x, u)
+    )(params, x3, u3)
 
 
-def decode(codes: jnp.ndarray, params: jnp.ndarray, *, out_dtype,
-           block_r: int, interpret: bool) -> jnp.ndarray:
-    r, c = codes.shape
+def decode_packed(payload: jnp.ndarray, params: jnp.ndarray, *, bits: int,
+                  out_dtype, block_r: int, interpret: bool) -> jnp.ndarray:
+    """payload: (R, C) uint8 -> (pack, R, C) dequantized segments."""
+    r, c = payload.shape
+    pack = 8 // bits
+    kernel = functools.partial(_decode_packed_kernel, bits=bits)
     return pl.pallas_call(
-        _decode_kernel,
-        grid=(pl.cdiv(r, block_r),),
+        kernel,
+        grid=(pack, pl.cdiv(r, block_r)),
         in_specs=[
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda k, i: (0, 0)),
+            pl.BlockSpec((block_r, c), lambda k, i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        out_specs=pl.BlockSpec((1, block_r, c), lambda k, i: (k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pack, r, c), out_dtype),
         interpret=interpret,
-    )(params, codes)
+    )(params, payload)

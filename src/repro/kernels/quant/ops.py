@@ -1,8 +1,26 @@
-"""jit'd wrapper for the quantization kernel.
+"""jit'd wrappers for the quantization kernels, with backend dispatch.
 
-Handles arbitrary shapes (pad + reshape to (R, C=512) lanes), draws the
-uniforms, computes global (lo, scale), picks BLOCK_R for the VMEM budget,
-and falls back to interpret=True off-TPU.
+Handles arbitrary shapes (pad + reshape to C=512 lanes), draws the
+uniforms, computes global (lo, scale), picks BLOCK_R per kernel from the
+actual resident operand dtypes, and dispatches between the two backends:
+
+  backend='pallas'  the TPU kernels (interpret=True off-TPU)
+  backend='jnp'     the pure-jnp reference (ref.py)
+  backend='auto'    pallas on TPU, jnp elsewhere
+
+Both backends consume the *same* (lo, scale) and the same uniform draws —
+`jax.random.uniform` fills shapes in flat C-order, so the (pack, R, C)
+segment view of encode and the (R*pack, C) view of qdq read identical
+per-element uniforms. Consequence (asserted in tests/test_codec.py):
+
+    decode(encode(x, key)) == quantize_dequantize(x, key)   bit-for-bit
+    pallas(interpret) == jnp                                bit-for-bit
+
+Wire layout: the padded flat array is split into pack = 8 // bits
+contiguous segments of R rows x 512 lanes; element i of the flat input
+lives at segment i // (R*512), bit-field (i // (R*512)) * bits of
+payload byte i % (R*512). Padding: inputs are zero-padded to a multiple
+of pack * 512 elements; payload bytes = ceil(n / (pack*512)) * 512.
 """
 from __future__ import annotations
 
@@ -21,55 +39,98 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _block_r(c: int) -> int:
-    # 3 fp32 tiles (x, u, out) resident
-    rows = VMEM_BUDGET // (3 * 4 * c)
+def _use_pallas(backend: str) -> bool:
+    if backend == "auto":
+        return jax.default_backend() == "tpu"
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown backend '{backend}'")
+    return backend == "pallas"
+
+
+def _block_r(c: int, bytes_per_out_row_elem: int) -> int:
+    """Rows per grid step such that all resident tiles fit VMEM_BUDGET.
+
+    `bytes_per_out_row_elem` sums, over every operand tile resident during
+    one grid step, the bytes that correspond to ONE element-column of one
+    output row (per-kernel: qdq has 3 fp32 tiles = 12; packed encode has
+    pack fp32 x-segments + pack fp32 u-segments + 1 uint8 out = 8*pack+1;
+    decode has 1 uint8 in + 1 fp32 out = 5).
+    """
+    rows = VMEM_BUDGET // (bytes_per_out_row_elem * c)
     rows = max(8, min(1024, rows))
     return int(rows) & ~7 or 8   # multiple of 8 sublanes
 
 
-def _to_2d(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+def _to_2d(x: jnp.ndarray, multiple: int = 1) -> jnp.ndarray:
+    """Flatten + zero-pad to (R, LANES) with R a multiple of `multiple`."""
     flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % LANES
+    pad = (-flat.shape[0]) % (LANES * multiple)
     flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, LANES), pad
+    return flat.reshape(-1, LANES)
 
 
-@partial(jax.jit, static_argnames=("bits",))
-def quantize_dequantize(x: jnp.ndarray, key: jax.Array, *,
-                        bits: int = 8) -> jnp.ndarray:
+def _params_for(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    lo, scale = ref.quant_params(x, bits)
+    return jnp.stack([lo, scale]).reshape(1, 2)
+
+
+@partial(jax.jit, static_argnames=("bits", "backend"))
+def quantize_dequantize(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
+                        backend: str = "auto") -> jnp.ndarray:
     """Fused Q(x) with stochastic rounding; same statistics as
     repro.core.compression.randomized_quantize."""
-    lo, scale = ref.quant_params(x, bits)
-    params = jnp.stack([lo, scale]).reshape(1, 2)
-    x2d, _ = _to_2d(x)
+    params = _params_for(x, bits)
+    # pad to the same multiple as the packed wire layout so qdq and
+    # decode(encode(.)) consume identical uniform draws (threefry bit
+    # generation is not prefix-stable across different totals)
+    x2d = _to_2d(x, multiple=8 // bits)
     u = jax.random.uniform(key, x2d.shape, jnp.float32)
-    out = kernel.qdq(x2d, u, params, bits=bits,
-                     block_r=_block_r(x2d.shape[1]), interpret=_interpret())
+    if _use_pallas(backend):
+        out = kernel.qdq(x2d, u, params, bits=bits,
+                         block_r=_block_r(x2d.shape[1], 3 * 4),
+                         interpret=_interpret())
+    else:
+        lo, scale = params[0, 0], params[0, 1]
+        out = ref.decode(ref.encode(x2d, u, lo, scale, bits=bits), lo, scale)
     return out.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
 
 
-@partial(jax.jit, static_argnames=("bits",))
-def encode(x: jnp.ndarray, key: jax.Array, *, bits: int = 8):
-    """Returns (codes int8 (R,C), params (1,2), orig_size). Wire bytes =
-    codes.size * bits / 8 (+ 8B header) — fed to the roofline model."""
-    lo, scale = ref.quant_params(x, bits)
-    params = jnp.stack([lo, scale]).reshape(1, 2)
-    x2d, _ = _to_2d(x)
-    u = jax.random.uniform(key, x2d.shape, jnp.float32)
-    codes = kernel.encode(x2d, u, params, bits=bits,
-                          block_r=_block_r(x2d.shape[1]),
-                          interpret=_interpret())
-    return codes, params
+@partial(jax.jit, static_argnames=("bits", "backend"))
+def encode(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
+           backend: str = "auto"):
+    """Returns (payload uint8 (R, 512), params (1, 2)).
+
+    The payload is the packed wire array: payload.size bytes carry
+    8 // bits codes per byte. Wire bytes = payload.nbytes + params.nbytes.
+    """
+    pack = 8 // bits
+    params = _params_for(x, bits)
+    x3 = _to_2d(x, multiple=pack).reshape(pack, -1, LANES)
+    u = jax.random.uniform(key, x3.shape, jnp.float32)
+    if _use_pallas(backend):
+        payload = kernel.encode_packed(
+            x3, u, params, bits=bits,
+            block_r=_block_r(x3.shape[2], 8 * pack + 1),
+            interpret=_interpret())
+    else:
+        payload = ref.encode_packed(x3, u, params[0, 0], params[0, 1],
+                                    bits=bits)
+    return payload, params
 
 
-@partial(jax.jit, static_argnames=("shape", "dtype"))
-def decode(codes: jnp.ndarray, params: jnp.ndarray, *, shape: tuple,
-           dtype=jnp.float32) -> jnp.ndarray:
-    out = kernel.decode(codes, params, out_dtype=dtype,
-                        block_r=_block_r(codes.shape[1]),
-                        interpret=_interpret())
+@partial(jax.jit, static_argnames=("bits", "shape", "dtype", "backend"))
+def decode(payload: jnp.ndarray, params: jnp.ndarray, *, shape: tuple,
+           bits: int = 8, dtype=jnp.float32, backend: str = "auto"):
+    """Unpack + dequantize a wire payload back to `shape`."""
+    if _use_pallas(backend):
+        out3 = kernel.decode_packed(
+            payload, params, bits=bits, out_dtype=jnp.float32,
+            block_r=_block_r(payload.shape[1], 1 + 4),
+            interpret=_interpret())
+    else:
+        out3 = ref.decode_packed(payload, params[0, 0], params[0, 1],
+                                 bits=bits)
     size = 1
     for d in shape:
         size *= d
-    return out.reshape(-1)[:size].reshape(shape)
+    return out3.reshape(-1)[:size].reshape(shape).astype(dtype)

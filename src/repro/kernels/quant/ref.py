@@ -1,8 +1,13 @@
-"""Pure-jnp oracle for the stochastic uniform quantization kernel.
+"""Pure-jnp oracle for the stochastic uniform quantization kernels.
 
-Matches repro.core.compression.randomized_quantize bit-for-bit when given
-the same uniform draws; split into encode (codes) / decode so the packed
-wire format is visible to tests and to the roofline byte accounting.
+Matches the Pallas kernels bit-for-bit when given the same uniform draws
+(and exactly, by construction, in interpret mode); split into encode /
+pack / unpack / decode so the packed wire format is visible to tests and
+to the roofline byte accounting.
+
+Wire format: see kernels/quant/kernel.py — b-bit codes are packed
+8 // b per uint8 across `pack` contiguous segments of the padded flat
+array: payload[r, c] = sum_k codes[k, r, c] << (k * b).
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ def quant_params(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def encode(x: jnp.ndarray, u: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarray:
-    """Stochastic round to b-bit codes (stored in int8 for bits <= 8)."""
+    """Stochastic round to b-bit codes (stored in uint8 for bits <= 8)."""
     levels = (1 << bits) - 1
     norm = (x.astype(jnp.float32) - lo) / scale
     floor = jnp.floor(norm)
@@ -31,6 +36,42 @@ def encode(x: jnp.ndarray, u: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarr
 
 def decode(codes: jnp.ndarray, lo, scale) -> jnp.ndarray:
     return codes.astype(jnp.float32) * scale + lo
+
+
+def pack_codes(codes3: jnp.ndarray, *, bits: int) -> jnp.ndarray:
+    """(pack, R, C) codes -> (R, C) uint8 payload (sub-byte bit-packing)."""
+    pack = codes3.shape[0]
+    assert pack == 8 // bits, (codes3.shape, bits)
+    acc = jnp.zeros(codes3.shape[1:], jnp.int32)
+    for k in range(pack):
+        acc = acc | (codes3[k].astype(jnp.int32) << (k * bits))
+    return acc.astype(jnp.uint8)
+
+
+def unpack_codes(payload: jnp.ndarray, *, bits: int) -> jnp.ndarray:
+    """(R, C) uint8 payload -> (pack, R, C) codes.
+
+    Written as a broadcasted shift (not a stack/concatenate): XLA CPU
+    miscompiles fused concatenate -> reshape -> odd-length slice chains
+    (observed on jax 0.4.37: garbage at the first post-concat element),
+    and downstream callers slice the flat view back to the input size.
+    """
+    pack = 8 // bits
+    mask = (1 << bits) - 1
+    shifts = (jnp.arange(pack, dtype=jnp.int32) * bits)[:, None, None]
+    return ((payload.astype(jnp.int32)[None] >> shifts) & mask).astype(
+        jnp.uint8)
+
+
+def encode_packed(x3: jnp.ndarray, u3: jnp.ndarray, lo, scale, *,
+                  bits: int) -> jnp.ndarray:
+    """(pack, R, C) segments -> (R, C) uint8 payload."""
+    return pack_codes(encode(x3, u3, lo, scale, bits=bits), bits=bits)
+
+
+def decode_packed(payload: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarray:
+    """(R, C) uint8 payload -> (pack, R, C) dequantized fp32 segments."""
+    return decode(unpack_codes(payload, bits=bits), lo, scale)
 
 
 def quantize_dequantize(x: jnp.ndarray, u: jnp.ndarray, *, bits: int) -> jnp.ndarray:

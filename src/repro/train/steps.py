@@ -3,13 +3,17 @@
 `make_train_step` builds one jit-able function:
     state, metrics = train_step(state, batch)
 with the paper's communication relaxations attached at the gradient-exchange
-point of the *sharded* trainer:
+point of the *sharded* trainer (the production tier of the two-tier
+compression story — the exact per-worker algorithms live in
+repro.core.communicators, the algorithm tier):
 
   * grad_compression='rq8'/...  — server-side compression of the device-owned
     gradient shard (the multi-server-PS view of Eq. 3.2: each device is the
     parameter server of its FSDP partition, so quantizing its shard is
-    exactly the PS's outgoing Q; DESIGN.md §2 records why worker-side Q is
-    not interceptable under pjit autodiff).
+    exactly the PS's outgoing Q; README.md "Compression story" records why
+    worker-side Q is not interceptable under pjit autodiff). Compression is
+    obtained from the Codec registry; metrics report the measured wire
+    bytes of the compressed gradient message.
   * error_feedback=True — single-sided DoubleSqueeze (Eq. 3.10-3.11) on the
     same shard: delta carried in the train state.
   * The exact two-sided algorithms live in repro.core.parallel (algorithm
@@ -78,7 +82,7 @@ def abstract_train_state(cfg: ModelConfig, optimizer: Optimizer, *,
 
 def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
                     step_cfg: TrainStepConfig = TrainStepConfig()):
-    q_fn, q_spec = compression.get(step_cfg.grad_compression)
+    q_codec = compression.codec(step_cfg.grad_compression)
 
     impl = _impl(step_cfg.scan_layers)
 
@@ -98,17 +102,21 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
             grad_norm = jnp.zeros(())
 
         new_state = dict(state)
+        comm_bytes = 0.0
         if step_cfg.grad_compression != "none":
             qkey = jax.random.fold_in(state["rng"], state["step"])
             if step_cfg.error_feedback:
                 v = jax.tree_util.tree_map(
                     lambda g, d: g.astype(jnp.float32) + d,
                     grads, state["ec_err"])
-                grads = compression.tree_compress(v, qkey, q_fn)
+                grads = q_codec.tree_qdq(v, qkey)
                 new_state["ec_err"] = jax.tree_util.tree_map(
                     lambda v_, q: v_ - q.astype(jnp.float32), v, grads)
             else:
-                grads = compression.tree_compress(grads, qkey, q_fn)
+                grads = q_codec.tree_qdq(grads, qkey)
+            # measured wire bytes of the compressed gradient message (a
+            # trace-time constant: shapes are static under jit)
+            comm_bytes = q_codec.tree_wire_bytes(grads)
 
         updates, new_opt = optimizer.update(grads, state["opt"],
                                             state["params"])
@@ -116,7 +124,8 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
         new_state["opt"] = new_opt
         new_state["step"] = state["step"] + 1
         metrics = {"loss": loss_val, "grad_norm": grad_norm,
-                   "step": state["step"]}
+                   "step": state["step"],
+                   "comm_bytes": jnp.asarray(comm_bytes, jnp.float32)}
         return new_state, metrics
 
     return train_step

@@ -1,0 +1,72 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+The container that runs tier-1 has no network access, so `pip install
+hypothesis` is not an option there; CI installs the real thing from
+requirements.txt. This stub covers exactly the API surface the test suite
+uses — `given`, `settings`, `strategies.integers/floats` — with
+deterministic sampling (seeded per-test) that always includes the
+boundary values, so the property tests stay meaningful.
+
+Imported by tests/conftest.py, which registers it (and its `strategies`
+attribute) in sys.modules under the real names only when the genuine
+package is missing.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Strategy:
+    """A value source: deterministic boundary cases + seeded random draws."""
+
+    def __init__(self, draw, boundaries):
+        self._draw = draw
+        self._boundaries = list(boundaries)
+
+    def examples(self, rng: random.Random, n: int):
+        out = list(self._boundaries[:n])
+        while len(out) < n:
+            out.append(self._draw(rng))
+        return out
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**63) if min_value is None else min_value
+    hi = 2**63 - 1 if max_value is None else max_value
+    mid = (lo + hi) // 2
+    return _Strategy(lambda r: r.randint(lo, hi), (lo, hi, mid))
+
+
+def floats(min_value=None, max_value=None, **_kw):
+    lo = -1e9 if min_value is None else min_value
+    hi = 1e9 if max_value is None else max_value
+    return _Strategy(lambda r: r.uniform(lo, hi),
+                     (lo, hi, 0.5 * (lo + hi)))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        n = getattr(fn, "_stub_max_examples", 20)
+        # per-test deterministic seed: reruns are reproducible
+        rng = random.Random(hash(fn.__qualname__) & 0xFFFFFFFF)
+        columns = [s.examples(rng, n) for s in strategies]
+
+        @functools.wraps(fn)
+        def wrapper():
+            for args in zip(*columns):
+                fn(*args)
+
+        # hide the strategy params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,4 +1,6 @@
 import os
+import sys
+import types
 
 # Keep the default 1-device CPU view for smoke tests and benches; ONLY
 # launch/dryrun.py forces 512 host devices (see the system design brief).
@@ -7,3 +9,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+# Property tests use hypothesis when available (CI installs it from
+# requirements.txt); offline containers fall back to the deterministic
+# stub so the suite still collects and the properties still run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given = _hypothesis_stub.given
+    _mod.settings = _hypothesis_stub.settings
+    _mod.strategies = types.ModuleType("hypothesis.strategies")
+    _mod.strategies.integers = _hypothesis_stub.integers
+    _mod.strategies.floats = _hypothesis_stub.floats
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

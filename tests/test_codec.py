@@ -1,0 +1,208 @@
+"""Codec engine tests: packed wire format, backend equality, and the
+measured-byte plumbing into eventsim / roofline / benchmarks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import communicators as C
+from repro.core import compression, eventsim
+
+KEY = jax.random.PRNGKey(0)
+AXIS = "w"
+
+
+# ------------------------------------------------------------- round trip ----
+
+@pytest.mark.parametrize("name", ["rq8", "rq4", "rq2"])
+def test_packed_backends_identical_same_key(name):
+    """Pallas (interpret mode off-TPU) and the jnp reference are the SAME
+    codec: identical payloads, identical decodes, for the same key."""
+    cdc = compression.codec(name)
+    pallas = compression.QuantCodec(cdc.bits, backend="pallas")
+    jnp_ref = compression.QuantCodec(cdc.bits, backend="jnp")
+    x = jax.random.normal(KEY, (777,))
+    pp = pallas.encode(x, KEY)
+    pj = jnp_ref.encode(x, KEY)
+    np.testing.assert_array_equal(pp.payload, pj.payload)
+    np.testing.assert_array_equal(pp.params, pj.params)
+    np.testing.assert_array_equal(pallas.decode(pp), jnp_ref.decode(pj))
+
+
+@pytest.mark.parametrize("name", ["rq8", "rq4", "rq2"])
+def test_decode_encode_equals_qdq(name):
+    """The fused path and the wire path are bit-identical, so falling back
+    to qdq where a collective needs fp32 changes nothing numerically."""
+    cdc = compression.codec(name)
+    for n in (5, 512, 1000, 4097):
+        x = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+        np.testing.assert_array_equal(cdc.decode(cdc.encode(x, KEY)),
+                                      cdc.qdq(x, KEY))
+
+
+@pytest.mark.parametrize("name,bound", [("rq8", 0.3), ("rq4", 0.6),
+                                        ("rq2", 1.5)])
+def test_packed_codec_unbiased(name, bound):
+    """E[decode(encode(x))] = x (Assumption 3) through the packed path."""
+    cdc = compression.codec(name)
+    x = jax.random.normal(KEY, (256,))
+    keys = jax.random.split(jax.random.PRNGKey(1), 600)
+    qs = jax.vmap(lambda k: cdc.decode(cdc.encode(x, k)))(keys)
+    assert float(jnp.abs(qs.mean(0) - x).max()) < bound
+
+
+# ------------------------------------------------------------- wire bytes ----
+
+@pytest.mark.parametrize("name,bits", [("rq8", 8), ("rq4", 4), ("rq2", 2)])
+def test_wire_bytes_matches_packed_arrays(name, bits):
+    """Codec.wire_bytes == actual packed array bytes == spec arithmetic
+    within the documented header + lane-padding overhead."""
+    cdc = compression.codec(name)
+    for n in (1000, 4096, 10**5):
+        x = jnp.zeros((n,), jnp.float32)
+        packed = cdc.encode(jax.random.normal(KEY, (n,)), KEY)
+        # measured == the arrays that would hit the wire
+        assert cdc.wire_bytes(x) == packed.wire_bytes
+        # sub-byte packing really happened: bits/8 bytes per element...
+        payload_bytes = packed.payload.size
+        assert payload_bytes >= n * bits / 8
+        # ...up to one pad granule (pack * 512 elements) + 8B header
+        granule_bytes = 512  # one padded row of packed codes
+        spec_bytes = cdc.spec.compressed_bytes(n)
+        assert packed.wire_bytes <= spec_bytes + granule_bytes
+        # and far below fp32
+        if n >= 4096:
+            assert packed.wire_bytes < 4 * n * (bits / 32 + 0.01)
+
+
+def test_wire_bytes_nonpackable_uses_spec():
+    cdc = compression.codec("sign1")
+    assert not cdc.packable
+    x = jnp.zeros((1000,), jnp.float32)
+    assert cdc.wire_bytes(x) == cdc.spec.compressed_bytes(1000)
+
+
+def test_tree_wire_bytes_sums_leaves():
+    cdc = compression.codec("rq4")
+    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((64, 64))}
+    total = cdc.tree_wire_bytes(tree)
+    assert total == cdc.wire_bytes(tree["a"]) + cdc.wire_bytes(tree["b"])
+
+
+# ----------------------------------------------------------- packed wire -----
+
+def test_packed_moves_through_ppermute():
+    """The wire object crosses ppermute intact (the ring's hop handoff)."""
+    n = 4
+    cdc = compression.codec("rq4")
+    x = jax.random.normal(KEY, (n, 100))
+
+    def shift(xi):
+        packed = cdc.encode(xi, KEY)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        moved = jax.tree_util.tree_map(
+            lambda a: jax.lax.ppermute(a, AXIS, perm), packed)
+        return cdc.decode(moved)
+
+    out = jax.vmap(shift, axis_name=AXIS)(x)
+    expect = jax.vmap(lambda xi: cdc.qdq(xi, KEY))(x)
+    # worker i ends with worker (i-1)'s decoded payload
+    np.testing.assert_array_equal(out, jnp.roll(expect, 1, axis=0))
+
+
+def test_csgd_ring_packed_equals_qdq_formulation():
+    """The packed ring (uint8 payloads through ppermute) is numerically
+    identical to the qdq formulation, because decode(encode(.)) == qdq."""
+    n = 4
+    g = jax.random.normal(KEY, (n, 32))
+    key = jax.random.PRNGKey(1)
+    out, _ = jax.vmap(
+        lambda gg: C.CSGDRingExchange(compressor="rq4")(gg, (), key,
+                                                        axis_name=AXIS),
+        axis_name=AXIS)(g)
+
+    cdc = compression.codec("rq4")
+    accs = [cdc.tree_qdq(g[i], jax.random.fold_in(key, i)) for i in range(n)]
+    for h in range(1, n):
+        prev = list(accs)
+        accs = [cdc.tree_qdq(prev[(i - 1) % n] + g[i],
+                             jax.random.fold_in(jax.random.fold_in(key, i), h))
+                for i in range(n)]
+    expect = np.stack([np.asarray(a) / n for a in accs])
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6, atol=1e-6)
+
+
+def test_exchanges_report_measured_bytes():
+    """message_bytes = bytes one worker sends per ITERATION (n-1 hops for
+    the ring, 2 neighbor sends for ring gossip)."""
+    tree = jnp.zeros((10**4,), jnp.float32)
+    rq4 = compression.codec("rq4")
+    assert C.CSGDRingExchange(compressor="rq4").message_bytes(
+        tree, n_workers=8) == 7 * rq4.tree_wire_bytes(tree)
+    assert C.CSGDPSExchange(compressor="rq4").message_bytes(tree) == \
+        2 * rq4.tree_wire_bytes(tree)
+    # mb-SGD uses the same uplink+broadcast convention (2x) as CSGD PS
+    assert C.MbSGDExchange().message_bytes(tree) == 2 * 4 * 10**4
+    assert C.DelayedExchange(inner=C.CSGDPSExchange("rq8")).message_bytes(
+        tree) == 2 * compression.codec("rq8").tree_wire_bytes(tree)
+    assert C.GossipMix("ring").message_bytes(tree, n_workers=8) == \
+        2 * 4 * 10**4
+    assert C.GossipMix("full").message_bytes(tree, n_workers=5) == \
+        4 * 4 * 10**4
+
+
+# ------------------------------------------------------- cost-model users ----
+
+def test_eventsim_consumes_measured_wire_bytes():
+    """K-times compression divides transfer only; with the measured codec
+    sizes the ring makespan lands between the ideal bits ratio and ideal
+    plus header/padding overhead."""
+    n, lat, tr = 8, 1e-4, 1e-2
+    size = 100.0
+    base = eventsim.ring_allreduce_makespan(n, size, t_lat=lat, t_tr=tr)
+    rq4 = eventsim.ring_allreduce_makespan(n, size, t_lat=lat, t_tr=tr,
+                                           codec="rq4")
+    # measured chunk MB must equal wire_size_mb of a chunk's elements
+    chunk_mb = eventsim.wire_size_mb("rq4", int(size * 1e6 / 4 / n))
+    assert rq4 == pytest.approx(2 * (n - 1) * (lat + chunk_mb * tr))
+    # ~8x fewer bytes than fp32 (4 bits vs 32), overheads included
+    lat_part = 2 * (n - 1) * lat
+    assert (base - lat_part) / (rq4 - lat_part) == pytest.approx(8.0,
+                                                                 rel=0.01)
+
+
+def test_eventsim_wire_size_matches_codec():
+    for name in ("rq8", "rq4", "rq2", "sign1"):
+        got = eventsim.wire_size_mb(name, 10**6)
+        want = compression.codec(name).wire_bytes_for(10**6) / 1e6
+        assert got == pytest.approx(want)
+
+
+def test_roofline_compressed_collective_uses_measured_codec():
+    from benchmarks.roofline import ICI_BW, compressed_collective_s
+    coll_bytes = 4e9
+    t = compressed_collective_s(coll_bytes, "rq4")
+    want = compression.codec("rq4").wire_bytes_for(int(coll_bytes / 4)) \
+        / ICI_BW
+    assert t == pytest.approx(want)
+    # ~8x cheaper than the fp32 collective term
+    assert (coll_bytes / ICI_BW) / t == pytest.approx(8.0, rel=0.01)
+
+
+def test_train_step_reports_wire_bytes():
+    """Production tier: metrics carry the measured compressed-message
+    size. (Tiny config to keep the test fast.)"""
+    from repro import configs
+    from repro.data.pipeline import SyntheticLM
+    from repro.optim import make_optimizer
+    from repro.train import steps
+
+    cfg = configs.get_config("qwen1.5-0.5b").reduced()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=17, batch=2, seed=0)
+    opt = make_optimizer("sgd", 1e-3)
+    scfg = steps.TrainStepConfig(grad_compression="rq4")
+    state = steps.init_train_state(cfg, opt, KEY, step_cfg=scfg)
+    ts = jax.jit(steps.make_train_step(cfg, opt, scfg))
+    state, m = ts(state, data.batch_at(0))
+    want = compression.codec("rq4").tree_wire_bytes(state["params"])
+    assert float(m["comm_bytes"]) == pytest.approx(want)

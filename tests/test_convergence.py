@@ -33,16 +33,24 @@ def test_sgd_noise_floor_vs_minibatch():
 
 
 def test_csgd_adds_variance_but_converges():
-    """Eq. (3.6): CSGD converges; coarser quantization = higher floor."""
+    """Eq. (3.6): CSGD converges; coarser quantization = more variance.
+
+    The quantization noise is *relative* (Assumption 4: the knob spacing
+    scales with the gradient range), so it does not create an absolute
+    gnorm floor above the sampling noise on this testbed; the robust
+    observable is the trajectory deviation from the uncompressed baseline
+    under identical seeds — orders of magnitude larger for rq2 than rq8.
+    """
     base = parallel.run_quadratic("mbsgd", n_workers=4, steps=300, lr=0.05)
     c8 = parallel.run_quadratic("csgd_ps", n_workers=4, steps=300, lr=0.05,
                                 exchange_kw={"compressor": "rq8"})
     c2 = parallel.run_quadratic("csgd_ps", n_workers=4, steps=300, lr=0.05,
                                 exchange_kw={"compressor": "rq2"})
     assert final_gnorm(c8) < 5e-2                      # converges
-    assert final_gnorm(c2) > final_gnorm(c8) - 1e-5    # coarser >= floor
-    assert final_gnorm(c8) < final_gnorm(c2) * 1.5 + 5e-2
-    del base
+    assert final_gnorm(c2) < 5e-2                      # even rq2 converges
+    dev8 = float(jnp.abs(c8.losses - base.losses).mean())
+    dev2 = float(jnp.abs(c2.losses - base.losses).mean())
+    assert dev2 > 5.0 * dev8                           # coarser = noisier
 
 
 def test_ecsgd_beats_naive_biased_compression():
@@ -104,9 +112,19 @@ def test_dsgd_full_topology_matches_mbsgd():
 
 
 def test_dsgd_heterogeneity_raises_floor():
-    """The varsigma (outer-variance) term of Thm 5.2.6."""
+    """The varsigma (outer-variance) term of Thm 5.2.6 / Lemma 5.2.4.
+
+    Outer variance enters through the consensus distance (workers pulled
+    toward different local minima between gossip rounds); the averaged
+    iterate of the quadratic still converges, so the robust observable is
+    the steady-state consensus floor, not the gnorm at x_bar.
+    """
     homo = parallel.run_quadratic("dsgd", n_workers=8, steps=300, lr=0.05,
                                   heterogeneity=0.0, seed=3)
     hetero = parallel.run_quadratic("dsgd", n_workers=8, steps=300, lr=0.05,
                                     heterogeneity=2.0, seed=3)
-    assert final_gnorm(hetero) > final_gnorm(homo)
+    homo_floor = float(homo.consensus[-50:].mean())
+    hetero_floor = float(hetero.consensus[-50:].mean())
+    assert hetero_floor > 3.0 * homo_floor
+    # both still converge to a stationary neighborhood
+    assert final_gnorm(hetero) < 5e-2 and final_gnorm(homo) < 5e-2

@@ -17,9 +17,9 @@ KEY = jax.random.PRNGKey(0)
 @pytest.mark.parametrize("bits", [2, 4, 8])
 def test_quant_kernel_matches_oracle(shape, bits):
     x = jax.random.normal(jax.random.fold_in(KEY, hash(shape) % 997), shape)
-    out = q_ops.quantize_dequantize(x, KEY, bits=bits)
+    out = q_ops.quantize_dequantize(x, KEY, bits=bits, backend="pallas")
     lo, scale = q_ref.quant_params(x, bits)
-    x2d, _ = q_ops._to_2d(x)
+    x2d = q_ops._to_2d(x, multiple=8 // bits)
     u = jax.random.uniform(KEY, x2d.shape, jnp.float32)
     expect = q_ref.decode(q_ref.encode(x2d, u, lo, scale, bits=bits),
                           lo, scale).reshape(-1)[:x.size].reshape(shape)
@@ -27,12 +27,32 @@ def test_quant_kernel_matches_oracle(shape, bits):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_quant_encode_decode_roundtrip(dtype):
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_encode_decode_roundtrip(dtype, bits):
     x = (jax.random.normal(KEY, (513,)) * 2).astype(dtype)
-    codes, params = q_ops.encode(x, KEY, bits=8)
-    assert codes.dtype == jnp.uint8
-    dec = q_ops.decode(codes, params, shape=(513,))
-    assert float(jnp.abs(dec - x.astype(jnp.float32)).max()) < 0.1
+    payload, params = q_ops.encode(x, KEY, bits=bits)
+    assert payload.dtype == jnp.uint8
+    # sub-byte packing: 8 // bits codes per payload byte
+    assert payload.size * (8 // bits) >= x.size
+    dec = q_ops.decode(payload, params, shape=(513,), bits=bits,
+                       dtype=jnp.float32)
+    tol = {8: 0.1, 4: 1.0, 2: 4.0}[bits]
+    assert float(jnp.abs(dec - x.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_packed_backends_bit_identical(bits):
+    """pallas (interpret off-TPU) and the jnp reference produce the same
+    payload, the same decode, and decode(encode(x)) == qdq(x)."""
+    x = jax.random.normal(KEY, (1000,))
+    qd = q_ops.quantize_dequantize(x, KEY, bits=bits, backend="jnp")
+    pay_p, par_p = q_ops.encode(x, KEY, bits=bits, backend="pallas")
+    pay_j, par_j = q_ops.encode(x, KEY, bits=bits, backend="jnp")
+    np.testing.assert_array_equal(pay_p, pay_j)
+    np.testing.assert_array_equal(par_p, par_j)
+    dec = q_ops.decode(pay_p, par_p, shape=(1000,), bits=bits,
+                       backend="pallas")
+    np.testing.assert_array_equal(dec, qd)
 
 
 def test_quant_kernel_unbiased():
