@@ -1,8 +1,23 @@
 """Kernel micro-benchmarks (interpret mode on CPU: correctness-scale only;
 the numbers that matter for the TPU target are the VMEM working sets and
-roofline estimates printed alongside)."""
+roofline estimates printed alongside).
+
+Emits machine-readable ``BENCH_kernels.json`` at the repo root —
+``[{"op": ..., "us": ..., "est": ...}, ...]`` — so every run extends the
+perf trajectory. ``--smoke`` shrinks every shape to CI scale (the job
+uploads the JSON as an artifact; the point is that the benchmark code
+itself cannot rot unnoticed).
+
+The tree-encode pair is the fused-vs-per-leaf codec comparison on the
+repro-100m gradient tree: per-leaf pays one dispatch + one (lo, scale)
+reduction + one padded message per pytree leaf; the fused flat-buffer
+tier pays them once for the whole tree.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -13,49 +28,107 @@ from repro.kernels.quant import ops as q_ops
 from repro.kernels.wkv6 import ops as wkv_ops
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_kernels.json")
+
 
 def _time(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.time()
+    # block on the warm-up call: compilation AND its async dispatch must
+    # finish before the timer starts, or they bleed into the first rep
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    out = None
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6  # us
+    return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def main():
+def _grad_tree(smoke: bool):
+    """A gradient-shaped pytree: repro-100m's param tree (reduced() dims
+    under --smoke), filled with random values."""
+    from repro import configs
+    from repro.models import transformer
+
+    cfg = configs.get_config("repro-100m")
+    if smoke:
+        cfg = cfg.reduced()
+    shapes = jax.eval_shape(
+        lambda: transformer.init(cfg, jax.random.PRNGKey(0)))
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    key = jax.random.PRNGKey(7)
+    vals = [jax.random.normal(jax.random.fold_in(key, i), leaf.shape,
+                              jnp.float32) for i, leaf in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def main(smoke: bool = False, out_path: str = OUT_PATH):
+    from repro.core import compression
+
     key = jax.random.PRNGKey(0)
     rows = []
 
-    x = jax.random.normal(key, (1 << 20,))
+    n_q = 1 << 14 if smoke else 1 << 20
+    x = jax.random.normal(key, (n_q,))
     us = _time(lambda a: q_ops.quantize_dequantize(a, key, bits=8), x)
     # TPU estimate: pure-VPU 2 passes over 4B+4B read + 4B write / 819GB/s
     est = (x.size * 12) / HBM_BW * 1e6
-    rows.append(("quant_qdq_1M", us, f"tpu_mem_bound_est={est:.1f}us"))
+    rows.append((f"quant_qdq_{n_q // 1024}K", us,
+                 f"tpu_mem_bound_est={est:.1f}us"))
 
-    q = jax.random.normal(key, (1, 1024, 8, 128), jnp.float32)
-    k = jax.random.normal(key, (1, 1024, 2, 128), jnp.float32)
-    v = jax.random.normal(key, (1, 1024, 2, 128), jnp.float32)
+    seq = 128 if smoke else 1024
+    q = jax.random.normal(key, (1, seq, 8, 128), jnp.float32)
+    k = jax.random.normal(key, (1, seq, 2, 128), jnp.float32)
+    v = jax.random.normal(key, (1, seq, 2, 128), jnp.float32)
     us = _time(lambda a, b, c: fa_ops.flash_attention(a, b, c, causal=True),
                q, k, v)
-    flops = 2 * 2 * 1024 * 1024 * 8 * 128  # qk + av
+    flops = 2 * 2 * seq * seq * 8 * 128  # qk + av
     est = flops / PEAK_FLOPS_BF16 * 1e6
-    rows.append(("flash_attn_1k", us, f"tpu_mxu_est={est:.1f}us"))
+    rows.append((f"flash_attn_{seq}", us, f"tpu_mxu_est={est:.1f}us"))
 
-    r = jax.random.normal(key, (1, 512, 4, 64)) * 0.5
-    kk = jax.random.normal(key, (1, 512, 4, 64)) * 0.5
-    vv = jax.random.normal(key, (1, 512, 4, 64)) * 0.5
-    lw = -jnp.exp(jax.random.normal(key, (1, 512, 4, 64)) * 0.3 - 2.5)
+    t_wkv = 64 if smoke else 512
+    r = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
+    kk = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
+    vv = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
+    lw = -jnp.exp(jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.3 - 2.5)
     u = jax.random.normal(key, (4, 64)) * 0.1
     us = _time(lambda *a: wkv_ops.wkv6(*a)[0], r, kk, vv, lw, u)
-    rows.append(("wkv6_512", us, "chunked-scan"))
+    rows.append((f"wkv6_{t_wkv}", us, "chunked-scan"))
+
+    # fused flat-buffer vs per-leaf tree-encode on the repro-100m gradient
+    # tree (L dispatches + L params reductions + L padded messages vs 1)
+    grads = _grad_tree(smoke)
+    n_leaves = len(jax.tree_util.tree_leaves(grads))
+    cdc = compression.codec("rq8")
+    us_leaf = _time(lambda t: cdc.tree_encode(t, key), grads)
+    us_flat = _time(lambda t: cdc.tree_encode_flat(t, key), grads)
+    b_leaf = cdc.tree_wire_bytes(grads)
+    b_flat = cdc.tree_wire_bytes_flat(grads)
+    tag = "reduced" if smoke else "100m"
+    rows.append((f"tree_encode_per_leaf_{tag}", us_leaf,
+                 f"wire_B={b_leaf:.0f},n_messages={n_leaves}"))
+    rows.append((f"tree_encode_flat_{tag}", us_flat,
+                 f"wire_B={b_flat:.0f},n_messages=1"))
 
     print("# Kernel microbenchmarks (CPU interpret mode — correctness tier)")
-    print(f"{'name':16s} {'us_per_call':>12s}  derived")
+    print(f"{'name':28s} {'us_per_call':>12s}  derived")
     for name, us, derived in rows:
-        print(f"{name:16s} {us:12.0f}  {derived}")
+        print(f"{name:28s} {us:12.0f}  {derived}")
+
+    payload = [{"op": name, "us": round(us, 1), "est": derived}
+               for name, us, derived in rows]
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(out_path)}")
     return ",".join(f"{n}={u:.0f}us" for n, u, _ in rows)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI-scale)")
+    ap.add_argument("--out", default=OUT_PATH,
+                    help="where to write BENCH_kernels.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out_path=args.out)

@@ -24,7 +24,7 @@ import os
 from typing import Optional
 
 from repro import configs
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import HBM_BW, ICI_BW, ICI_LAT, PEAK_FLOPS_BF16
 from repro.models.common import INPUT_SHAPES
 
 RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results.jsonl")
@@ -56,7 +56,8 @@ def model_flops(arch: str, shape_name: str) -> float:
 
 
 def compressed_collective_s(coll_bytes: float, codec_name: str, *,
-                            elem_bytes: float = 4.0) -> float:
+                            elem_bytes: float = 4.0,
+                            n_messages: int = 1) -> float:
     """Collective term if gradient sync shipped `codec_name`'s wire format.
 
     Uses the MEASURED Codec.wire_bytes of the packed payload (incl. params
@@ -64,12 +65,17 @@ def compressed_collective_s(coll_bytes: float, codec_name: str, *,
     collective bytes — not a hand-written bits ratio. `elem_bytes` is the
     wire dtype of the original collective (4 for fp32, 2 for the bf16
     programs dryrun compiles).
+
+    Per-message accounting: each wire message pays the fixed ICI_LAT, so
+    the term is wire/ICI_BW + n_messages * ICI_LAT. The fused flat-buffer
+    codec tier ships ONE message per sync (n_messages=1, the default);
+    per-leaf messaging would set n_messages to the gradient's leaf count.
     """
     from repro.core import compression
 
     n_elements = max(1, int(coll_bytes / elem_bytes))
     wire = compression.codec(codec_name).wire_bytes_for(n_elements)
-    return wire / ICI_BW
+    return wire / ICI_BW + n_messages * ICI_LAT
 
 
 def derive(rec: dict, *, grad_codec: Optional[str] = "rq8") -> dict:
@@ -142,7 +148,9 @@ def main():
         return "missing"
     print("# Roofline terms per (arch x shape), single-pod 16x16 "
           "(seconds/step; v5e constants; coll(rq8) = collective term under "
-          "the measured rq8 packed wire format)")
+          "the measured rq8 packed wire format, shipped as ONE fused "
+          "flat-buffer message — per-leaf messaging would add "
+          "(L-1)*ICI_LAT per sync)")
     print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
           f"{'collect':>10s} {'coll(rq8)':>10s} {'dominant':>10s} "
           f"{'useful':>7s}")

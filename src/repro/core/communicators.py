@@ -13,13 +13,19 @@ compression randomness, per-worker error state, exact update rules.
   GossipMix          Eq. (5.2)  X <- (X - gamma G) W        ppermute ring / pmean
 
 Compression is obtained from the Codec registry (repro.core.compression).
-Where the algebra permits — the ring's hop-to-hop handoff — the *packed*
-wire object (uint8 payload + params) moves through ``ppermute``, so the
-byte savings are real on device; where a summation needs fp32 (the PS
-pmean) we fall back to the fused qdq, which is bit-identical to
-decode(encode(.)) for the packable codecs. Every exchange reports its
-measured per-iteration wire bytes via ``message_bytes`` (consumed by
-eventsim / table1_1).
+The compressed exchanges default to the **fused flat-buffer tier**
+(``flat=True``): the whole gradient pytree is flattened onto a
+FlatLayout and moves as ONE bucketed message per exchange step — a ring
+hop ppermutes exactly one packed payload + one (n_buckets, 2) params
+header instead of one pair per pytree leaf, so an L-leaf gradient pays
+``t_lat`` once per hop, not L times (§1.3's per-message latency charge).
+``flat=False`` keeps the per-leaf reference path: there the ring moves a
+tree of Packed objects through ``ppermute`` and the PS forms fall back
+to leaf-wise qdq. Both tiers are numerically honest — decode(encode(.))
+== qdq(.) bit-for-bit per bucket/leaf for the packable codecs; where a
+summation needs fp32 (the PS pmean) the fused qdq is used directly.
+Every exchange reports its measured per-iteration wire bytes via
+``message_bytes`` (consumed by eventsim / table1_1).
 
 The production (pjit) tier reuses the same codec registry on the
 device-owned gradient shard (multi-server-PS view: devices ARE the
@@ -103,10 +109,15 @@ class CSGDPSExchange:
     fused qdq (identical bits to a decode(encode(.)) round trip); the
     measured wire cost of the packed payload is still what
     ``message_bytes`` reports.
+
+    flat=True (default) runs both directions through the fused
+    flat-buffer tier: one flatten, one bucketed qdq per direction, ONE
+    logical message per direction instead of one per leaf.
     """
 
     compressor: str = "rq8"
     name: str = "csgd_ps"
+    flat: bool = True
 
     def init(self, params: PyTree) -> PyTree:
         return ()
@@ -114,9 +125,15 @@ class CSGDPSExchange:
     def __call__(self, grad, state, key, *, axis_name):
         cdc = compression.codec(self.compressor)
         wkey = _worker_key(key, axis_name)
+        skey = jax.random.fold_in(key, 0x5E4E4)
+        if self.flat:
+            layout = compression.FlatLayout.from_tree(grad)
+            local_q = cdc.flat_qdq(layout.flatten(grad), wkey)
+            out = cdc.flat_qdq(lax.pmean(local_q, axis_name), skey)
+            return layout.unflatten(out), state
         local_q = cdc.tree_qdq(grad, wkey)
         mean_q = lax.pmean(local_q, axis_name)
-        out = cdc.tree_qdq(mean_q, jax.random.fold_in(key, 0x5E4E4))
+        out = cdc.tree_qdq(mean_q, skey)
         return out, state
 
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
@@ -124,7 +141,10 @@ class CSGDPSExchange:
         broadcast (in the multi-server view each worker also serves its
         partition of the outgoing message, one partition per peer)."""
         del n_workers
-        return 2.0 * compression.codec(self.compressor).tree_wire_bytes(tree)
+        cdc = compression.codec(self.compressor)
+        if self.flat:
+            return 2.0 * cdc.tree_wire_bytes_flat(tree)
+        return 2.0 * cdc.tree_wire_bytes(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,15 +157,23 @@ class CSGDRingExchange:
     paper's Figure 3.3.
 
     For packable codecs the hop handoff moves the PACKED wire object
-    (uint8 payload + params header) through ppermute — the collective
-    really ships bits/element = codec bits, not fp32 — and the hop
-    arithmetic decodes, adds the local gradient, and re-encodes. Because
-    decode(encode(x, k)) == qdq(x, k) bit-for-bit, this is numerically
-    identical to the qdq formulation used for non-packable codecs.
+    through ppermute — the collective really ships bits/element = codec
+    bits, not fp32 — and the hop arithmetic decodes, adds the local
+    gradient, and re-encodes. Because decode(encode(x, k)) == qdq(x, k)
+    bit-for-bit, this is numerically identical to the qdq formulation
+    used for non-packable codecs.
+
+    flat=True (default): the wire object is ONE FlatPacked for the whole
+    gradient tree — each hop ppermutes exactly one packed payload + one
+    bucketed params header, and the hop arithmetic runs on the flat fp32
+    buffer (decode + add + re-encode, no per-leaf dispatch). flat=False
+    keeps the per-leaf reference: a tree of Packed objects, 2L arrays
+    through ppermute per hop.
     """
 
     compressor: str = "rq8"
     name: str = "csgd_ring"
+    flat: bool = True
 
     def init(self, params: PyTree) -> PyTree:
         return ()
@@ -156,6 +184,19 @@ class CSGDRingExchange:
         perm = [(i, (i + 1) % n) for i in range(n)]
         wkey = _worker_key(key, axis_name)
 
+        if self.flat and cdc.packable and isinstance(n, int) and n > 1:
+            layout = compression.FlatLayout.from_tree(grad)
+            gflat = layout.flatten(grad)
+            acc = cdc.flat_encode(gflat, wkey, layout)
+
+            def hop(h, acc):
+                shifted = _tree_ppermute(acc, axis_name, perm)
+                summed = cdc.flat_decode(shifted) + gflat
+                return cdc.flat_encode(summed, jax.random.fold_in(wkey, h),
+                                       layout)
+
+            acc = lax.fori_loop(1, n, hop, acc)
+            return layout.unflatten(cdc.flat_decode(acc) / n), state
         if cdc.packable and isinstance(n, int) and n > 1:
             acc = cdc.tree_encode(grad, wkey)
 
@@ -168,20 +209,23 @@ class CSGDRingExchange:
             acc = lax.fori_loop(1, n, hop, acc)
             out = cdc.tree_decode(acc)
         else:
-            out = cdc.tree_qdq(grad, wkey)
+            tree_qdq = cdc.tree_qdq_flat if self.flat else cdc.tree_qdq
+            out = tree_qdq(grad, wkey)
 
             def hop_qdq(h, acc):
                 shifted = lax.ppermute(acc, axis_name, perm)
                 summed = _tree_map2(lambda a, g: a + g, shifted, grad)
-                return cdc.tree_qdq(summed, jax.random.fold_in(wkey, h))
+                return tree_qdq(summed, jax.random.fold_in(wkey, h))
 
             if isinstance(n, int) and n > 1:
                 out = lax.fori_loop(1, n, hop_qdq, out)
         return jax.tree_util.tree_map(lambda a: a / n, out), state
 
     def message_bytes(self, tree, *, n_workers: int = 2) -> float:
-        """n-1 hops per iteration, one packed payload sent per hop."""
-        per_hop = compression.codec(self.compressor).tree_wire_bytes(tree)
+        """n-1 hops per iteration, one packed message sent per hop."""
+        cdc = compression.codec(self.compressor)
+        per_hop = (cdc.tree_wire_bytes_flat(tree) if self.flat
+                   else cdc.tree_wire_bytes(tree))
         return max(n_workers - 1, 1) * per_hop
 
 
@@ -194,18 +238,41 @@ class ECSGDExchange:
     Works with ANY codec, biased ones included (Section 3.3); tested via
     Lemma 3.4.1's x_tilde recursion. Both sides need the dequantized value
     for the error recursion, so this uses the fused qdq throughout.
+
+    flat=True (default): both error buffers are SINGLE flat fp32
+    residual vectors over the whole gradient tree, and the compression /
+    error recursion runs on the flat buffer — one fused pass per side,
+    one logical message per direction. flat=False keeps per-leaf error
+    trees (the reference formulation).
     """
 
     compressor: str = "sign1"
     name: str = "ecsgd"
+    flat: bool = True
 
     def init(self, params: PyTree) -> PyTree:
+        if self.flat:
+            total = compression.FlatLayout.from_tree(params).total
+            return {"worker_err": jnp.zeros((total,), jnp.float32),
+                    "server_err": jnp.zeros((total,), jnp.float32)}
         z = jax.tree_util.tree_map(jnp.zeros_like, params)
         return {"worker_err": z, "server_err": z}
 
     def __call__(self, grad, state, key, *, axis_name):
         cdc = compression.codec(self.compressor)
         wkey = _worker_key(key, axis_name)
+        skey = jax.random.fold_in(key, 0x5E4E4)
+        if self.flat:
+            layout = compression.FlatLayout.from_tree(grad)
+            gflat = layout.flatten(grad)
+            # worker side (Eqs. 3.8-3.9) on the flat residual buffer
+            v_n = gflat + state["worker_err"]
+            q_n = cdc.flat_qdq(v_n, wkey)
+            # server side (Eqs. 3.10-3.11); shared key -> identical everywhere
+            v = lax.pmean(q_n, axis_name) + state["server_err"]
+            out = cdc.flat_qdq(v, skey)
+            return layout.unflatten(out), {"worker_err": v_n - q_n,
+                                           "server_err": v - out}
         # worker side (Eqs. 3.8-3.9)
         v_n = _tree_map2(lambda g, d: g + d, grad, state["worker_err"])
         q_n = cdc.tree_qdq(v_n, wkey)
@@ -213,14 +280,17 @@ class ECSGDExchange:
         # server side (Eqs. 3.10-3.11); shared key -> identical on all workers
         v = _tree_map2(lambda m, d: m + d, lax.pmean(q_n, axis_name),
                        state["server_err"])
-        out = cdc.tree_qdq(v, jax.random.fold_in(key, 0x5E4E4))
+        out = cdc.tree_qdq(v, skey)
         new_server_err = _tree_map2(lambda a, b: a - b, v, out)
         return out, {"worker_err": new_worker_err, "server_err": new_server_err}
 
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
         """As CSGDPSExchange: worker->server + broadcast share."""
         del n_workers
-        return 2.0 * compression.codec(self.compressor).tree_wire_bytes(tree)
+        cdc = compression.codec(self.compressor)
+        if self.flat:
+            return 2.0 * cdc.tree_wire_bytes_flat(tree)
+        return 2.0 * cdc.tree_wire_bytes(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -312,6 +382,10 @@ EXCHANGES: dict[str, Callable[..., Any]] = {
     "csgd_ring": CSGDRingExchange,
     "ecsgd": ECSGDExchange,
     "asgd": DelayedExchange,
+    # model-mixing operator (params -> params, no gradient/state protocol);
+    # registered so make_exchange("gossip", topology=...) works like every
+    # other pattern instead of requiring a direct import
+    "gossip": GossipMix,
 }
 
 

@@ -16,6 +16,19 @@ needs fp32 (PS reduce) without changing the math. Operators with no
 packed implementation yet (sparsifiers, sign, clipping) are qdq-only
 codecs: `packable` is False and wire_bytes comes from the static spec.
 
+On top of the per-leaf tier sits the **fused flat-buffer tier** (the
+production default): a `FlatLayout` flattens the whole gradient pytree
+into ONE contiguous fp32 buffer, segments it into size-capped buckets
+each owning a `(lo, scale)` row of an `(n_buckets, 2)` params array, and
+`tree_encode_flat` / `tree_decode_flat` / `tree_qdq_flat` move the whole
+tree as ONE `FlatPacked` message — one kernel launch, one params
+reduction, at most one pad granule, and 2 arrays per collective instead
+of 2 per leaf. In the paper's §1.3 switch model every message pays a
+fixed `t_lat`, so per-leaf messaging costs `2N*L*t_lat` per ring
+exchange while the fused tier pays `2N*t_lat`; eventsim's `n_messages`
+knob makes that gap measurable. The per-leaf paths remain the reference
+the fused tier is tested against (bit-identical per bucket).
+
 `CompressionSpec` remains the static metadata *inside* each codec; the
 cost-model consumers (eventsim / roofline / table1_1 / comm_patterns)
 take `Codec.wire_bytes(...)`, which for packable codecs is measured from
@@ -71,8 +84,79 @@ class CompressionSpec:
         return self.compressed_bytes(n_elements) / (4.0 * n_elements)
 
 
+# Fused flat-buffer tier: elements per quantization bucket. One bucket =
+# one (lo, scale) row in the FlatPacked params array; 4Mi elements keeps a
+# 100M-param gradient at ~30 rows. Single source of truth lives next to
+# the bucketed kernels.
+from repro.kernels.quant.ops import DEFAULT_BUCKET_ELEMS  # noqa: E402
+
+
 # ---------------------------------------------------------------------------
-# The wire object
+# The flat layout: static element offsets for the fused (whole-pytree)
+# wire format.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static offset table mapping a pytree onto ONE contiguous fp32 buffer.
+
+    Computed once from the treedef + leaf shapes (cheap; shapes are static
+    under jit): leaf i occupies flat[offsets[i] : offsets[i] + sizes[i]],
+    reshaped to shapes[i] and cast back to dtypes[i] on unflatten.
+    `unflatten(flatten(tree))` is bit-exact for float leaves (fp32 round
+    trips exactly; bf16 -> fp32 -> bf16 is the identity).
+
+    Frozen + hashable so it can ride in FlatPacked's static pytree aux and
+    key jit caches.
+    """
+
+    treedef: Any
+    shapes: tuple          # tuple[tuple[int, ...], ...]
+    dtypes: tuple          # tuple[np.dtype, ...]
+    offsets: tuple         # element offset of each leaf in the flat buffer
+    sizes: tuple           # element count of each leaf
+    total: int             # sum(sizes)
+
+    @classmethod
+    def from_tree(cls, tree) -> "FlatLayout":
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+        dtypes = tuple(jnp.dtype(getattr(leaf, "dtype", jnp.float32))
+                       for leaf in leaves)
+        sizes, offsets, off = [], [], 0
+        for shape in shapes:
+            n = 1
+            for d in shape:
+                n *= d
+            sizes.append(n)
+            offsets.append(off)
+            off += n
+        return cls(treedef, shapes, dtypes, tuple(offsets), tuple(sizes),
+                   off)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Pytree -> one contiguous (total,) fp32 buffer."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+
+    def unflatten(self, flat: jnp.ndarray):
+        """(total,) buffer -> pytree with the original shapes/dtypes."""
+        leaves = [
+            flat[o:o + n].reshape(shape).astype(dtype)
+            for o, n, shape, dtype in zip(self.offsets, self.sizes,
+                                          self.shapes, self.dtypes)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# The wire objects
 # ---------------------------------------------------------------------------
 
 
@@ -100,6 +184,44 @@ class Packed:
     def tree_flatten(self):
         return (self.payload, self.params), (self.shape, self.dtype,
                                              self.codec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Measured size: payload bytes + header (params) bytes."""
+        payload = self.payload.size * jnp.dtype(self.payload.dtype).itemsize
+        header = self.params.size * jnp.dtype(self.params.dtype).itemsize
+        return int(payload + header)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FlatPacked:
+    """ONE compressed message for a whole pytree (the fused wire object).
+
+    payload: (rows_kept, 512) uint8 — the bucketed packed codes of the
+             entire flat buffer (at most one pad granule, at the very end).
+    params:  (n_buckets, 2) fp32 — one [lo, scale] row per bucket.
+    layout:  the FlatLayout that unflattens the decode back into the tree.
+    codec / bucket_elems: static decode metadata.
+
+    Registered as a pytree whose children are (payload, params): a ring hop
+    ppermutes exactly TWO arrays per exchange — one payload, one header —
+    instead of two per pytree leaf.
+    """
+
+    payload: jnp.ndarray
+    params: jnp.ndarray
+    layout: FlatLayout
+    codec: str
+    bucket_elems: int
+
+    def tree_flatten(self):
+        return (self.payload, self.params), (self.layout, self.codec,
+                                             self.bucket_elems)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -159,6 +281,69 @@ class Codec:
         return self.wire_bytes(
             jax.ShapeDtypeStruct((int(n_elements),), jnp.float32))
 
+    # -- fused flat-buffer tier -------------------------------------------
+    #
+    # One message per exchange instead of one per pytree leaf: the tree is
+    # flattened onto a FlatLayout, quantized per size-capped bucket in a
+    # single kernel pass, and shipped as ONE FlatPacked. The per-leaf
+    # methods above remain the reference the fused path is tested against.
+
+    def flat_qdq(self, flat: jnp.ndarray, key: Optional[jax.Array], *,
+                 bucket_elems: int = DEFAULT_BUCKET_ELEMS) -> jnp.ndarray:
+        """Fused qdq over one flat fp32 buffer (one message's worth).
+
+        Base implementation: a single application of the operator to the
+        whole buffer — qdq-only codecs get the fused (one-pass, one-
+        message) semantics for free. QuantCodec overrides this with the
+        bucketed kernel."""
+        del bucket_elems
+        return self.qdq(flat, key)
+
+    def flat_encode(self, flat: jnp.ndarray, key: Optional[jax.Array],
+                    layout: FlatLayout, *,
+                    bucket_elems: int = DEFAULT_BUCKET_ELEMS) -> FlatPacked:
+        raise NotImplementedError(
+            f"codec '{self.name}' has no packed wire format; use flat_qdq")
+
+    def flat_decode(self, packed: FlatPacked) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"codec '{self.name}' has no packed wire format; use flat_qdq")
+
+    def tree_qdq_flat(self, tree, key: Optional[jax.Array], *,
+                      bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+        """Whole-tree fused qdq through the flat buffer (one pass)."""
+        layout = FlatLayout.from_tree(tree)
+        flat = self.flat_qdq(layout.flatten(tree), key,
+                             bucket_elems=bucket_elems)
+        return layout.unflatten(flat)
+
+    def tree_encode_flat(self, tree, key: Optional[jax.Array], *,
+                         bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                         ) -> FlatPacked:
+        """Whole tree -> ONE FlatPacked wire message."""
+        layout = FlatLayout.from_tree(tree)
+        return self.flat_encode(layout.flatten(tree), key, layout,
+                                bucket_elems=bucket_elems)
+
+    def tree_decode_flat(self, packed: FlatPacked):
+        """Inverse of tree_encode_flat (FlatPacked -> tree of arrays)."""
+        return packed.layout.unflatten(self.flat_decode(packed))
+
+    def tree_wire_bytes_flat(self, tree, *,
+                             bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                             ) -> float:
+        """Measured wire bytes of the ONE fused message for `tree`."""
+        layout = FlatLayout.from_tree(tree)
+        if not self.packable:
+            # one message -> one static-spec header, not one per leaf
+            return self.spec.compressed_bytes(layout.total)
+        flat = jax.ShapeDtypeStruct((layout.total,), jnp.float32)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        out = jax.eval_shape(
+            partial(self.flat_encode, layout=layout,
+                    bucket_elems=bucket_elems), flat, key)
+        return float(out.wire_bytes)
+
     # -- pytrees ----------------------------------------------------------
 
     def tree_qdq(self, tree, key: jax.Array):
@@ -212,6 +397,28 @@ class QuantCodec(Codec):
         return ops.decode(packed.payload, packed.params,
                           shape=packed.shape, bits=self.bits,
                           dtype=packed.dtype, backend=self.backend)
+
+    # fused flat-buffer tier: bucketed kernels (grid over buckets)
+
+    def flat_qdq(self, flat, key, *, bucket_elems=DEFAULT_BUCKET_ELEMS):
+        from repro.kernels.quant import ops
+        return ops.qdq_flat(flat, key, bits=self.bits,
+                            bucket_elems=bucket_elems, backend=self.backend)
+
+    def flat_encode(self, flat, key, layout: FlatLayout, *,
+                    bucket_elems=DEFAULT_BUCKET_ELEMS) -> FlatPacked:
+        from repro.kernels.quant import ops
+        payload, params = ops.encode_flat(flat, key, bits=self.bits,
+                                          bucket_elems=bucket_elems,
+                                          backend=self.backend)
+        return FlatPacked(payload, params, layout, self.name, bucket_elems)
+
+    def flat_decode(self, packed: FlatPacked):
+        from repro.kernels.quant import ops
+        return ops.decode_flat(packed.payload, packed.params,
+                               total=packed.layout.total, bits=self.bits,
+                               bucket_elems=packed.bucket_elems,
+                               backend=self.backend)
 
 
 class QdqCodec(Codec):

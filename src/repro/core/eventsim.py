@@ -29,6 +29,15 @@ actual packed payload for that element count (including the params header
 and the pad-to-lane-granule overhead). The scalar ``compression=K`` knob
 remains for the paper's closed-form sweeps.
 
+Per-message accounting: every builder also accepts ``n_messages`` — how
+many wire messages one logical exchange step is split into. Each message
+pays the fixed t_lat, so a logical transfer costs
+``n_messages * t_lat + size * t_tr`` (the bytes are unchanged). This is
+exactly the fused-vs-per-leaf codec gap: a gradient pytree shipped leaf
+by leaf sets n_messages = L (ring exchange latency ~ 2 N L t_lat), the
+fused flat-buffer tier sets n_messages = 1 (~ 2 N t_lat) — the paper's
+own argument for why latency, not bandwidth, dominates small messages.
+
 Example 1.3.2's "14 vs 9 units" figure reads one unit differently than these
 semantics (we get 13 vs 8) but the *saving* — exactly the halved transfer
 time, latency untouched — matches; asserted in tests.
@@ -41,13 +50,19 @@ from typing import Iterable, Optional, Sequence
 
 @dataclasses.dataclass(frozen=True)
 class Msg:
-    """A point-to-point message request."""
+    """A point-to-point message request.
+
+    n_messages: wire messages this logical transfer is split into
+    (back-to-back on the same port pair). Each pays t_lat; the size is
+    the TOTAL across them, so duration = n_messages*t_lat + size*t_tr.
+    """
 
     t_req: float          # earliest time the sender wants to start
     src: int
     dst: int
     size: float           # in MB (or any unit consistent with t_tr)
     tag: str = ""
+    n_messages: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +119,7 @@ def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
         t_req, seq, m = remaining[best]
         done[best] = True
         t0 = max(t_req, send_free[m.src], recv_free[m.dst])
-        dur = t_lat + m.size * t_tr
+        dur = m.n_messages * t_lat + m.size * t_tr
         t_end = t0 + dur
         send_free[m.src] = t_end
         recv_free[m.dst] = t_end
@@ -141,21 +156,23 @@ def _msg_mb(size: float, compression: float, codec: Optional[str],
 
 def single_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
                        compression: float = 1.0,
-                       codec: Optional[str] = None) -> float:
+                       codec: Optional[str] = None,
+                       n_messages: int = 1) -> float:
     """Simulated PS makespan with the broadcast gated on aggregation."""
     ps = n
     s = _msg_mb(size, compression, codec)
-    up = simulate([Msg(0.0, w, ps, s, "agg") for w in range(n)],
+    up = simulate([Msg(0.0, w, ps, s, "agg", n_messages) for w in range(n)],
                   t_lat=t_lat, t_tr=t_tr)
     t_sum = up.makespan
-    down = simulate([Msg(t_sum, ps, w, s, "bc") for w in range(n)],
-                    t_lat=t_lat, t_tr=t_tr)
+    down = simulate([Msg(t_sum, ps, w, s, "bc", n_messages)
+                     for w in range(n)], t_lat=t_lat, t_tr=t_tr)
     return down.makespan
 
 
 def ring_allreduce_msgs(n: int, size: float, *, partitioned: bool = True,
                         compression: float = 1.0,
-                        codec: Optional[str] = None) -> list[Msg]:
+                        codec: Optional[str] = None,
+                        n_messages: int = 1) -> list[Msg]:
     """§1.3.3: reduce-scatter + all-gather on a logical ring.
 
     partitioned=True: model split into n chunks (the paper's key design
@@ -168,53 +185,62 @@ def ring_allreduce_msgs(n: int, size: float, *, partitioned: bool = True,
         for r in range(rounds):
             phase = "reduce" if r < n - 1 else "gather"
             for w in range(n):
-                msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"{phase}{r}"))
+                msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"{phase}{r}",
+                                n_messages))
     else:
         chunk = _msg_mb(size, compression, codec)
         # one token circles the ring twice (2(n-1) sequential hops); model as
         # chained requests via tags — simulate() serializes on ports anyway
         for r in range(2 * (n - 1)):
             w = r % n
-            msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"hop{r}"))
+            msgs.append(Msg(0.0, w, (w + 1) % n, chunk, f"hop{r}",
+                            n_messages))
     return msgs
 
 
 def ring_allreduce_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
                             partitioned: bool = True,
                             compression: float = 1.0,
-                            codec: Optional[str] = None) -> float:
+                            codec: Optional[str] = None,
+                            n_messages: int = 1) -> float:
     """Round-synchronous ring AllReduce makespan.
 
     Each of the 2(n-1) rounds moves one chunk per worker concurrently
-    (every worker sends one + receives one, allowed by the model), so a round
-    costs t_lat + chunk * t_tr.
+    (every worker sends one + receives one, allowed by the model), so a
+    round costs n_messages * t_lat + chunk * t_tr — per-leaf codec paths
+    set n_messages = leaf count L (latency ~ 2 N L t_lat), the fused
+    flat-buffer tier sets 1 (~ 2 N t_lat).
     """
     chunk = _msg_mb(size, compression, codec, n_chunks=n if partitioned else 1)
-    return 2 * (n - 1) * (t_lat + chunk * t_tr)
+    return 2 * (n - 1) * (n_messages * t_lat + chunk * t_tr)
 
 
 def multi_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
                       compression: float = 1.0,
-                      codec: Optional[str] = None) -> float:
+                      codec: Optional[str] = None,
+                      n_messages: int = 1) -> float:
     """§1.3.4: every worker hosts 1/n of the model; same cost as ring AR.
 
     Phase 1: n-1 incoming shards per server, perfectly staggered (Example
-    1.3.4) -> (n-1)(t_lat + chunk t_tr); phase 2 symmetric.
+    1.3.4) -> (n-1)(n_messages t_lat + chunk t_tr); phase 2 symmetric.
     """
     chunk = _msg_mb(size, compression, codec, n_chunks=n)
-    return 2 * (n - 1) * (t_lat + chunk * t_tr)
+    return 2 * (n - 1) * (n_messages * t_lat + chunk * t_tr)
 
 
 def decentralized_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
                            degree: int = 2, compression: float = 1.0,
-                           codec: Optional[str] = None) -> float:
+                           codec: Optional[str] = None,
+                           n_messages: int = 1) -> float:
     """§5.1: each worker exchanges its FULL model with `degree` neighbors.
 
-    Sends serialize at each worker's send port -> degree * (t_lat + size t_tr),
-    = 2 t_lat + 2 t_tr for the ring (paper's closed form).
+    Sends serialize at each worker's send port ->
+    degree * (n_messages t_lat + size t_tr), = 2 t_lat + 2 t_tr for the
+    ring with one fused message (paper's closed form).
     """
     del n
-    return degree * (t_lat + _msg_mb(size, compression, codec) * t_tr)
+    return degree * (n_messages * t_lat
+                     + _msg_mb(size, compression, codec) * t_tr)
 
 
 def async_ps_timeline(n: int, *, t_compute: Sequence[float], t_lat: float,

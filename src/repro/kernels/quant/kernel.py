@@ -130,3 +130,103 @@ def decode_packed(payload: jnp.ndarray, params: jnp.ndarray, *, bits: int,
         out_shape=jax.ShapeDtypeStruct((pack, r, c), out_dtype),
         interpret=interpret,
     )(params, payload)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed (fused flat-buffer) kernels. The whole gradient pytree arrives as
+# ONE (n_buckets, pack, Rb, C) buffer; each bucket has its own (lo, scale)
+# row in an (n_buckets, 2) params array. The grid gains a leading bucket
+# dimension whose index selects the params row, so every block still reads a
+# full aligned tile and the kernel bodies stay pure-VPU elementwise — the
+# same shapes-in/shapes-out contract as the per-leaf kernels, just with
+# per-bucket scales. Bit-identical to ref.*_bucketed for the same uniforms.
+# ---------------------------------------------------------------------------
+
+
+def _qdq_bucketed_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
+    """x_ref, u_ref, o_ref: (1, pack, BLOCK_R, C); params_ref: (1, 2) is
+    this bucket's [lo, scale] row."""
+    lo = params_ref[0, 0]
+    scale = params_ref[0, 1]
+    q = _quantize(x_ref[...], u_ref[...], lo, scale, levels)
+    o_ref[...] = (q * scale + lo).astype(o_ref.dtype)
+
+
+def _encode_packed_bucketed_kernel(params_ref, x_ref, u_ref, o_ref, *,
+                                   bits: int):
+    """x_ref, u_ref: (1, pack, BLOCK_R, C) — one bucket's row tile, all
+    segments; o_ref: (1, BLOCK_R, C) packed payload tile."""
+    pack = 8 // bits
+    levels = (1 << bits) - 1
+    lo = params_ref[0, 0]
+    scale = params_ref[0, 1]
+    acc = None
+    for k in range(pack):
+        q = _quantize(x_ref[0, k], u_ref[0, k], lo, scale, levels)
+        q = q.astype(jnp.int32) << (k * bits)
+        acc = q if acc is None else acc | q
+    o_ref[0] = acc.astype(jnp.uint8)
+
+
+def _decode_packed_bucketed_kernel(params_ref, c_ref, o_ref, *, bits: int):
+    k = pl.program_id(0)
+    lo = params_ref[0, 0]
+    scale = params_ref[0, 1]
+    mask = (1 << bits) - 1
+    field = (c_ref[0].astype(jnp.int32) >> (k * bits)) & mask
+    o_ref[0, 0] = (field.astype(jnp.float32) * scale + lo).astype(o_ref.dtype)
+
+
+def qdq_bucketed(x4: jnp.ndarray, u4: jnp.ndarray, params: jnp.ndarray, *,
+                 bits: int, block_r: int, interpret: bool) -> jnp.ndarray:
+    """x4, u4: (B, pack, Rb, C); params: (B, 2). Returns dequantized x4."""
+    b, pack, r, c = x4.shape
+    kernel = functools.partial(_qdq_bucketed_kernel, levels=(1 << bits) - 1)
+    seg = pl.BlockSpec((1, pack, block_r, c), lambda bi, i: (bi, 0, i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, pl.cdiv(r, block_r)),
+        in_specs=[pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)), seg, seg],
+        out_specs=seg,
+        out_shape=jax.ShapeDtypeStruct((b, pack, r, c), x4.dtype),
+        interpret=interpret,
+    )(params, x4, u4)
+
+
+def encode_packed_bucketed(x4: jnp.ndarray, u4: jnp.ndarray,
+                           params: jnp.ndarray, *, bits: int, block_r: int,
+                           interpret: bool) -> jnp.ndarray:
+    """x4, u4: (B, pack, Rb, C) bucket segments; returns (B, Rb, C) uint8."""
+    b, pack, r, c = x4.shape
+    assert pack == 8 // bits, (x4.shape, bits)
+    kernel = functools.partial(_encode_packed_bucketed_kernel, bits=bits)
+    seg = pl.BlockSpec((1, pack, block_r, c), lambda bi, i: (bi, 0, i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, pl.cdiv(r, block_r)),
+        in_specs=[pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)), seg, seg],
+        out_specs=pl.BlockSpec((1, block_r, c), lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, c), jnp.uint8),
+        interpret=interpret,
+    )(params, x4, u4)
+
+
+def decode_packed_bucketed(payload: jnp.ndarray, params: jnp.ndarray, *,
+                           bits: int, out_dtype, block_r: int,
+                           interpret: bool) -> jnp.ndarray:
+    """payload: (B, Rb, C) uint8 -> (B, pack, Rb, C) dequantized segments."""
+    b, r, c = payload.shape
+    pack = 8 // bits
+    kernel = functools.partial(_decode_packed_bucketed_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(pack, b, pl.cdiv(r, block_r)),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda k, bi, i: (bi, 0)),
+            pl.BlockSpec((1, block_r, c), lambda k, bi, i: (bi, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_r, c),
+                               lambda k, bi, i: (bi, k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, pack, r, c), out_dtype),
+        interpret=interpret,
+    )(params, payload)

@@ -34,6 +34,12 @@ from repro.kernels.quant import kernel, ref
 LANES = 512
 VMEM_BUDGET = 8 * 1024 * 1024   # conservative half of ~16MB usable
 
+# Fused flat-buffer tier: elements per quantization bucket (4Mi elements =
+# 16 MiB fp32 per bucket -> a 100M-param gradient is ~25-31 (lo, scale)
+# rows instead of one per pytree leaf). Canonical definition;
+# repro.core.compression re-exports it.
+DEFAULT_BUCKET_ELEMS = 1 << 22
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
@@ -134,3 +140,194 @@ def decode(payload: jnp.ndarray, params: jnp.ndarray, *, shape: tuple,
     for d in shape:
         size *= d
     return out3.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused flat-buffer tier: the whole gradient pytree as ONE buffer, segmented
+# into size-capped buckets with an (n_buckets, 2) params array. Wire layout:
+# bucket b owns the contiguous element range [b*cap, (b+1)*cap) of the flat
+# buffer and is segment-packed *within itself* (the per-leaf layout, applied
+# per bucket). Full buckets contribute Rb = cap // (pack*512) payload rows
+# each; the (possibly short) LAST bucket is padded only to the pack*512
+# granule and gets its own, smaller segment view of Rt = ceil(t / (pack*512))
+# rows — trimming rows of a cap-sized view would drop real elements, because
+# segment packing interleaves the whole bucket range into every row. So the
+# whole-tree message pays at most ONE pad granule (the tail's) plus one
+# 8-byte params row per bucket — vs one granule + one row per leaf on the
+# per-leaf paths. Kernel cost is O(1) in the leaf count: one bucketed call
+# for the full buckets + one per-leaf-style call for the tail.
+# ---------------------------------------------------------------------------
+
+
+def _align_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def flat_geometry(total: int, *, bits: int,
+                  bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+    """Static bucket geometry for a flat buffer of `total` elements.
+
+    Returns (pack, cap, n_buckets, rows_per_bucket, rows_kept):
+      cap             elements per full bucket (granule-aligned cap on
+                      `bucket_elems`, shrunk for small buffers);
+      rows_per_bucket payload rows each full bucket contributes;
+      rows_kept       total payload rows on the wire — Rb per full bucket
+                      plus the tail bucket's granule-aligned Rt.
+    """
+    if total <= 0:
+        raise ValueError(f"empty flat buffer (total={total})")
+    pack = 8 // bits
+    granule = pack * LANES                      # elements per payload row
+    cap = _align_up(min(bucket_elems, total), granule)
+    n_buckets = -(-total // cap)
+    rows_b = cap // granule
+    tail = total - (n_buckets - 1) * cap        # in (0, cap]
+    rows_kept = (n_buckets - 1) * rows_b + -(-tail // granule)
+    return pack, cap, n_buckets, rows_b, rows_kept
+
+
+def _bucket_views(flat: jnp.ndarray, key, *, bits: int, bucket_elems: int):
+    """Split a flat buffer into head/tail segment views + per-bucket params.
+
+    head: the n_buckets-1 full buckets as a (B-1, pack, Rb, C) view (None
+    when there is a single bucket); tail: the last bucket, edge-padded to
+    its own granule, as a (pack, Rt, C) view. ONE uniform draw covers
+    head + padded tail, so qdq_flat and encode_flat consume identical
+    per-element uniforms (bit-identical results). Edge-mode padding
+    repeats the last real element, so the pad never perturbs the tail
+    bucket's (lo, hi)."""
+    pack, cap, nb, rows_b, _ = flat_geometry(flat.size, bits=bits,
+                                             bucket_elems=bucket_elems)
+    granule = pack * LANES
+    flat = flat.reshape(-1).astype(jnp.float32)
+    head_elems = (nb - 1) * cap
+    tail = flat[head_elems:]
+    t = tail.shape[0]
+    rt = -(-t // granule)
+    # per-bucket [lo, scale] rows (tail's from its REAL elements only)
+    levels = (1 << bits) - 1
+    los, his = [], []
+    if nb > 1:
+        head2 = flat[:head_elems].reshape(nb - 1, cap)
+        los.append(jnp.min(head2, axis=1))
+        his.append(jnp.max(head2, axis=1))
+    los.append(jnp.min(tail)[None])
+    his.append(jnp.max(tail)[None])
+    lo = jnp.concatenate(los)
+    hi = jnp.concatenate(his)
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    params = jnp.stack([lo, scale], axis=1)          # (n_buckets, 2)
+    # one uniform draw over head + granule-padded tail: encode and qdq see
+    # the same per-element randomness
+    u = (None if key is None else
+         jax.random.uniform(key, (head_elems + rt * granule,), jnp.float32))
+    x4 = u4 = None
+    if nb > 1:
+        x4 = flat[:head_elems].reshape(nb - 1, pack, rows_b, LANES)
+        if u is not None:
+            u4 = u[:head_elems].reshape(x4.shape)
+    tail_pad = jnp.pad(tail, (0, rt * granule - t), mode="edge")
+    x3 = tail_pad.reshape(pack, rt, LANES)
+    u3 = None if u is None else u[head_elems:].reshape(x3.shape)
+    return x4, u4, x3, u3, params, (pack, nb, rows_b, rt, t)
+
+
+@partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
+def qdq_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
+             bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+             backend: str = "auto") -> jnp.ndarray:
+    """Fused per-bucket Q(x) over a flat buffer (whole pytree, one pass).
+
+    Bit-identical to decode_flat(encode_flat(flat, key)) — same uniform
+    draws, same per-bucket params, same rounding."""
+    x4, u4, x3, u3, params, (pack, nb, _, rt, t) = _bucket_views(
+        flat, key, bits=bits, bucket_elems=bucket_elems)
+    parts = []
+    if _use_pallas(backend):
+        if nb > 1:
+            h = kernel.qdq_bucketed(
+                x4, u4, params[:nb - 1], bits=bits,
+                block_r=_block_r(LANES, 12 * pack), interpret=_interpret())
+            parts.append(h.reshape(-1))
+        tl = kernel.qdq(x3.reshape(pack * rt, LANES),
+                        u3.reshape(pack * rt, LANES), params[nb - 1:nb],
+                        bits=bits, block_r=_block_r(LANES, 3 * 4),
+                        interpret=_interpret())
+        parts.append(tl.reshape(-1)[:t])
+    else:
+        if nb > 1:
+            h = ref.qdq_bucketed(x4, u4, params[:nb - 1, 0],
+                                 params[:nb - 1, 1], bits=bits)
+            parts.append(h.reshape(-1))
+        lo, scale = params[nb - 1, 0], params[nb - 1, 1]
+        tl = ref.decode(ref.encode(x3, u3, lo, scale, bits=bits), lo, scale)
+        parts.append(tl.reshape(-1)[:t])
+    return jnp.concatenate(parts).astype(flat.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
+def encode_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
+                bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+                backend: str = "auto"):
+    """Bucketed encode of a flat fp32 buffer.
+
+    Returns (payload uint8 (rows_kept, 512), params fp32 (n_buckets, 2)).
+    Wire bytes = payload.nbytes + params.nbytes: the ONE message the
+    fused exchanges ship per hop."""
+    x4, u4, x3, u3, params, (pack, nb, _, rt, t) = _bucket_views(
+        flat, key, bits=bits, bucket_elems=bucket_elems)
+    parts = []
+    if _use_pallas(backend):
+        if nb > 1:
+            h = kernel.encode_packed_bucketed(
+                x4, u4, params[:nb - 1], bits=bits,
+                block_r=_block_r(LANES, 8 * pack + 1),
+                interpret=_interpret())
+            parts.append(h.reshape(-1, LANES))
+        parts.append(kernel.encode_packed(
+            x3, u3, params[nb - 1:nb], bits=bits,
+            block_r=_block_r(LANES, 8 * pack + 1), interpret=_interpret()))
+    else:
+        if nb > 1:
+            parts.append(ref.encode_packed_bucketed(
+                x4, u4, params[:nb - 1, 0], params[:nb - 1, 1],
+                bits=bits).reshape(-1, LANES))
+        parts.append(ref.encode_packed(x3, u3, params[nb - 1, 0],
+                                       params[nb - 1, 1], bits=bits))
+    return jnp.concatenate(parts, axis=0), params
+
+
+@partial(jax.jit, static_argnames=("bits", "total", "bucket_elems",
+                                   "backend"))
+def decode_flat(payload: jnp.ndarray, params: jnp.ndarray, *, total: int,
+                bits: int = 8, bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+                backend: str = "auto") -> jnp.ndarray:
+    """Unpack + dequantize a bucketed wire payload back to (total,) fp32."""
+    pack, cap, nb, rows_b, rows_kept = flat_geometry(
+        total, bits=bits, bucket_elems=bucket_elems)
+    granule = pack * LANES
+    head_rows = (nb - 1) * rows_b
+    t = total - (nb - 1) * cap
+    parts = []
+    if _use_pallas(backend):
+        if nb > 1:
+            h = kernel.decode_packed_bucketed(
+                payload[:head_rows].reshape(nb - 1, rows_b, LANES),
+                params[:nb - 1], bits=bits, out_dtype=jnp.float32,
+                block_r=_block_r(LANES, 1 + 4), interpret=_interpret())
+            parts.append(h.reshape(-1))
+        tl = kernel.decode_packed(
+            payload[head_rows:], params[nb - 1:nb], bits=bits,
+            out_dtype=jnp.float32, block_r=_block_r(LANES, 1 + 4),
+            interpret=_interpret())
+        parts.append(tl.reshape(-1)[:t])
+    else:
+        if nb > 1:
+            h = ref.decode_packed_bucketed(
+                payload[:head_rows].reshape(nb - 1, rows_b, LANES),
+                params[:nb - 1, 0], params[:nb - 1, 1], bits=bits)
+            parts.append(h.reshape(-1))
+        tl = ref.decode_packed(payload[head_rows:], params[nb - 1, 0],
+                               params[nb - 1, 1], bits=bits)
+        parts.append(tl.reshape(-1)[:t])
+    return jnp.concatenate(parts)

@@ -77,3 +77,50 @@ def decode_packed(payload: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarray:
 def quantize_dequantize(x: jnp.ndarray, u: jnp.ndarray, *, bits: int) -> jnp.ndarray:
     lo, scale = quant_params(x, bits)
     return decode(encode(x, u, lo, scale, bits=bits), lo, scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed (fused flat-buffer) variants: one (lo, scale) row per bucket.
+#
+# The flat gradient buffer is viewed as (n_buckets, pack, Rb, C): bucket b
+# owns the contiguous element range [b*cap, (b+1)*cap) and is segment-packed
+# *within itself* exactly like the per-leaf wire format above, so one payload
+# row never mixes elements from two buckets. lo/scale arrive as (n_buckets,)
+# vectors; broadcasting against the leading bucket axis reuses the same
+# encode/decode math elementwise.
+# ---------------------------------------------------------------------------
+
+
+def _bcast(v: jnp.ndarray) -> jnp.ndarray:
+    """(B,) per-bucket param -> broadcastable against (B, pack, Rb, C)."""
+    return v[:, None, None, None]
+
+
+def encode_packed_bucketed(x4: jnp.ndarray, u4: jnp.ndarray, lo, scale, *,
+                           bits: int) -> jnp.ndarray:
+    """(B, pack, Rb, C) segments + per-bucket (B,) params -> (B, Rb, C)."""
+    codes = encode(x4, u4, _bcast(lo), _bcast(scale), bits=bits)
+    pack = codes.shape[1]
+    assert pack == 8 // bits, (codes.shape, bits)
+    acc = jnp.zeros((codes.shape[0],) + codes.shape[2:], jnp.int32)
+    for k in range(pack):
+        acc = acc | (codes[:, k].astype(jnp.int32) << (k * bits))
+    return acc.astype(jnp.uint8)
+
+
+def decode_packed_bucketed(payload: jnp.ndarray, lo, scale, *,
+                           bits: int) -> jnp.ndarray:
+    """(B, Rb, C) payload + per-bucket (B,) params -> (B, pack, Rb, C)."""
+    pack = 8 // bits
+    mask = (1 << bits) - 1
+    shifts = (jnp.arange(pack, dtype=jnp.int32) * bits)[None, :, None, None]
+    codes = ((payload.astype(jnp.int32)[:, None] >> shifts) & mask)
+    return codes.astype(jnp.float32) * _bcast(scale) + _bcast(lo)
+
+
+def qdq_bucketed(x4: jnp.ndarray, u4: jnp.ndarray, lo, scale, *,
+                 bits: int) -> jnp.ndarray:
+    """Fused per-bucket quantize-dequantize on the (B, pack, Rb, C) view."""
+    lo4, scale4 = _bcast(lo), _bcast(scale)
+    return decode(encode(x4, u4, lo4, scale4, bits=bits), lo4,
+                  scale4).astype(x4.dtype)

@@ -172,11 +172,20 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def _state_shardings(state_shapes, mesh):
-    """Train-state sharding: params/moments/ec_err by param rules; scalars
-    and rng replicated."""
+    """Train-state sharding: params/moments by param rules; the flat
+    ec_err residual buffer FSDP-shards over the data axes; scalars and
+    rng replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
     def rule(path, leaf):
         names = sharding._path_names(path)
-        if names and names[0] in ("params", "ec_err"):
+        if names and names[0] == "ec_err":
+            # single flat fp32 buffer (fused codec tier): 1-D shard over
+            # the full data-axis tuple when divisible, else replicate
+            spec = PartitionSpec(sharding._maybe(
+                sharding._ACT_BATCH_AXES, leaf.shape[0], mesh))
+            return NamedSharding(mesh, spec)
+        if names and names[0] == "params":
             return sharding.params_shardings_leaf(path[1:], leaf, mesh)
         if names and names[0] == "opt" and len(names) > 1 \
                 and names[1] in ("m", "v"):

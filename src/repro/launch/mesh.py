@@ -32,5 +32,9 @@ def make_host_mesh(n: int | None = None, *, axes=("data",)):
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link (~per chip, ring neighbor)
+ICI_LAT = 1e-6                  # s fixed per-message latency on a link (the
+                                # switch model's t_lat; charged once per wire
+                                # message, so per-leaf gradient messaging
+                                # pays it L times, the fused tier once)
 VMEM_BYTES = 16 * 1024 * 1024
 HBM_BYTES = 16 * 1024**3        # 16 GB per v5e chip

@@ -12,10 +12,14 @@ repro.core.communicators, the algorithm tier):
     parameter server of its FSDP partition, so quantizing its shard is
     exactly the PS's outgoing Q; README.md "Compression story" records why
     worker-side Q is not interceptable under pjit autodiff). Compression is
-    obtained from the Codec registry; metrics report the measured wire
-    bytes of the compressed gradient message.
+    obtained from the Codec registry and runs through the FUSED flat-buffer
+    tier: the whole gradient tree is flattened onto a FlatLayout and
+    quantized per size-capped bucket in one pass — one message, one kernel
+    launch, one (n_buckets, 2) params reduction, instead of one per pytree
+    leaf. Metrics report the measured wire bytes of that one fused message.
   * error_feedback=True — single-sided DoubleSqueeze (Eq. 3.10-3.11) on the
-    same shard: delta carried in the train state.
+    same shard: the residual delta is a SINGLE flat fp32 buffer in the
+    train state (state['ec_err'], shape (n_params,)).
   * The exact two-sided algorithms live in repro.core.parallel (algorithm
     tier) and are validated against the theorems there.
 
@@ -67,8 +71,10 @@ def init_train_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array,
         "rng": key,
     }
     if step_cfg.error_feedback:
-        state["ec_err"] = jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        # single flat fp32 residual buffer over the whole gradient tree
+        # (the fused-tier analogue of a per-leaf error pytree)
+        total = compression.FlatLayout.from_tree(params).total
+        state["ec_err"] = jnp.zeros((total,), jnp.float32)
     return state
 
 
@@ -105,18 +111,20 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
         comm_bytes = 0.0
         if step_cfg.grad_compression != "none":
             qkey = jax.random.fold_in(state["rng"], state["step"])
+            # fused flat-buffer path: flatten once, quantize per bucket in
+            # one pass, ship ONE message
+            layout = compression.FlatLayout.from_tree(grads)
+            gflat = layout.flatten(grads)
             if step_cfg.error_feedback:
-                v = jax.tree_util.tree_map(
-                    lambda g, d: g.astype(jnp.float32) + d,
-                    grads, state["ec_err"])
-                grads = q_codec.tree_qdq(v, qkey)
-                new_state["ec_err"] = jax.tree_util.tree_map(
-                    lambda v_, q: v_ - q.astype(jnp.float32), v, grads)
+                v = gflat + state["ec_err"]
+                qflat = q_codec.flat_qdq(v, qkey)
+                new_state["ec_err"] = v - qflat
             else:
-                grads = q_codec.tree_qdq(grads, qkey)
-            # measured wire bytes of the compressed gradient message (a
+                qflat = q_codec.flat_qdq(gflat, qkey)
+            grads = layout.unflatten(qflat)
+            # measured wire bytes of the one fused gradient message (a
             # trace-time constant: shapes are static under jit)
-            comm_bytes = q_codec.tree_wire_bytes(grads)
+            comm_bytes = q_codec.tree_wire_bytes_flat(grads)
 
         updates, new_opt = optimizer.update(grads, state["opt"],
                                             state["params"])

@@ -111,14 +111,15 @@ def test_packed_moves_through_ppermute():
 
 
 def test_csgd_ring_packed_equals_qdq_formulation():
-    """The packed ring (uint8 payloads through ppermute) is numerically
-    identical to the qdq formulation, because decode(encode(.)) == qdq."""
+    """The per-leaf packed ring (flat=False reference tier: uint8 payloads
+    through ppermute) is numerically identical to the per-leaf qdq
+    formulation, because decode(encode(.)) == qdq."""
     n = 4
     g = jax.random.normal(KEY, (n, 32))
     key = jax.random.PRNGKey(1)
     out, _ = jax.vmap(
-        lambda gg: C.CSGDRingExchange(compressor="rq4")(gg, (), key,
-                                                        axis_name=AXIS),
+        lambda gg: C.CSGDRingExchange(compressor="rq4", flat=False)(
+            gg, (), key, axis_name=AXIS),
         axis_name=AXIS)(g)
 
     cdc = compression.codec("rq4")
@@ -179,19 +180,25 @@ def test_eventsim_wire_size_matches_codec():
 
 
 def test_roofline_compressed_collective_uses_measured_codec():
-    from benchmarks.roofline import ICI_BW, compressed_collective_s
+    from benchmarks.roofline import ICI_BW, ICI_LAT, compressed_collective_s
     coll_bytes = 4e9
     t = compressed_collective_s(coll_bytes, "rq4")
-    want = compression.codec("rq4").wire_bytes_for(int(coll_bytes / 4)) \
+    wire_term = compression.codec("rq4").wire_bytes_for(int(coll_bytes / 4)) \
         / ICI_BW
-    assert t == pytest.approx(want)
-    # ~8x cheaper than the fp32 collective term
-    assert (coll_bytes / ICI_BW) / t == pytest.approx(8.0, rel=0.01)
+    # one fused message -> one ICI_LAT on top of the transfer term
+    assert t == pytest.approx(wire_term + ICI_LAT)
+    # per-message accounting: per-leaf messaging (n_messages=L) pays the
+    # latency L times, transfer unchanged
+    t_leaf = compressed_collective_s(coll_bytes, "rq4", n_messages=110)
+    assert t_leaf - t == pytest.approx(109 * ICI_LAT)
+    # ~8x cheaper than the fp32 collective term (transfer part)
+    assert (coll_bytes / ICI_BW) / wire_term == pytest.approx(8.0, rel=0.01)
 
 
 def test_train_step_reports_wire_bytes():
-    """Production tier: metrics carry the measured compressed-message
-    size. (Tiny config to keep the test fast.)"""
+    """Production tier: metrics carry the measured size of the ONE fused
+    gradient message (flat-buffer tier). (Tiny config to keep the test
+    fast.)"""
     from repro import configs
     from repro.data.pipeline import SyntheticLM
     from repro.optim import make_optimizer
@@ -204,5 +211,7 @@ def test_train_step_reports_wire_bytes():
     state = steps.init_train_state(cfg, opt, KEY, step_cfg=scfg)
     ts = jax.jit(steps.make_train_step(cfg, opt, scfg))
     state, m = ts(state, data.batch_at(0))
-    want = compression.codec("rq4").tree_wire_bytes(state["params"])
+    want = compression.codec("rq4").tree_wire_bytes_flat(state["params"])
     assert float(m["comm_bytes"]) == pytest.approx(want)
+    # and the fused message is strictly smaller than per-leaf messaging
+    assert want < compression.codec("rq4").tree_wire_bytes(state["params"])

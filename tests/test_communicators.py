@@ -23,13 +23,32 @@ def test_mbsgd_is_exact_mean():
 
 
 def test_csgd_ps_form_eq_3_2():
-    """out = Q(mean_n Q(g_n)) with per-worker inner keys, shared outer key."""
+    """out = Q(mean_n Q(g_n)) with per-worker inner keys, shared outer key
+    (fused flat-buffer tier: Q is the bucketed flat qdq)."""
     n = 4
     g = jax.random.normal(jax.random.PRNGKey(0), (n, 32))
     ex = C.CSGDPSExchange(compressor="rq8")
     key = jax.random.PRNGKey(1)
     out, _ = _vrun(ex, g, jax.vmap(ex.init)(g), key)
-    # manual replication of Eq. 3.2
+    # manual replication of Eq. 3.2 through the fused tier
+    cdc = compression.codec("rq8")
+    inner = jnp.stack([
+        cdc.flat_qdq(g[i], jax.random.fold_in(key, i)) for i in range(n)])
+    expect = cdc.flat_qdq(inner.mean(0), jax.random.fold_in(key, 0x5E4E4))
+    np.testing.assert_allclose(out[0], expect, rtol=1e-5, atol=1e-6)
+    # identical broadcast on every worker (it is ONE message in the paper)
+    for i in range(1, n):
+        np.testing.assert_allclose(out[i], out[0], rtol=0, atol=0)
+
+
+def test_csgd_ps_per_leaf_reference_form():
+    """flat=False keeps the per-leaf reference formulation (leaf-wise
+    tree_compress with split keys) bit-compatible with PR 1."""
+    n = 4
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, 32))
+    ex = C.CSGDPSExchange(compressor="rq8", flat=False)
+    key = jax.random.PRNGKey(1)
+    out, _ = _vrun(ex, g, jax.vmap(ex.init)(g), key)
     q_fn, _ = compression.get("rq8")
     inner = jnp.stack([
         compression.tree_compress(g[i], jax.random.fold_in(key, i), q_fn)
@@ -37,9 +56,6 @@ def test_csgd_ps_form_eq_3_2():
     expect = compression.tree_compress(inner.mean(0),
                                        jax.random.fold_in(key, 0x5E4E4), q_fn)
     np.testing.assert_allclose(out[0], expect, rtol=1e-5, atol=1e-6)
-    # identical broadcast on every worker (it is ONE message in the paper)
-    for i in range(1, n):
-        np.testing.assert_allclose(out[i], out[0], rtol=0, atol=0)
 
 
 def test_ecsgd_lemma_3_4_1_recursion():
