@@ -1,0 +1,130 @@
+"""Virtual-cluster benchmark: time-to-loss under a 4x straggler.
+
+Schedules sync-PS, async-PS, local-SGD(H), DSGD(ring) and LAQ on the same
+8-worker cluster (one 4x straggler, §4.1's Figure 4.1/4.2 setup), replays
+every trace against REAL training (the §1.1.3 quadratic; ``--lm`` adds the
+reduced repro-100m LM) with the fused ``rq4`` codec, and reports each
+protocol's simulated makespan, applied updates, max staleness, wire
+traffic, and time-to-loss — the Figure 4.3-style loss-vs-wall-clock sweep
+the closed-form timelines could not produce.
+
+Emits machine-readable ``BENCH_cluster.json`` at the repo root; ``--smoke``
+shrinks rounds/shapes to CI scale (the job uploads the JSON as an
+artifact, so the benchmark cannot rot unnoticed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro import cluster
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_cluster.json")
+
+N = 8
+STRAGGLER_FACTOR = 4.0
+
+
+def run_quadratic_sweep(*, rounds: int, lr: float = 0.1,
+                        codec: str = "rq4") -> list[dict]:
+    spec = cluster.ClusterSpec(
+        n_workers=N, t_compute=1.0,
+        multipliers=cluster.straggler_multipliers(
+            N, factor=STRAGGLER_FACTOR),
+        t_lat=1e-2, t_tr=2e-3, size_mb=1.0, codec=codec)
+    wl = cluster.quadratic_workload(n_workers=N)
+
+    sync_tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=rounds)
+    traces = [
+        sync_tr,
+        # equal simulated wall-clock: async runs for sync's makespan
+        cluster.make_protocol("async_ps").schedule(
+            spec, horizon=sync_tr.makespan),
+        cluster.make_protocol("local_sgd", period_h=8).schedule(
+            spec, rounds=max(rounds // 8, 1)),
+        cluster.make_protocol("dsgd").schedule(spec, rounds=rounds),
+        cluster.make_protocol("laq", skip=2).schedule(spec, rounds=rounds),
+    ]
+    results = [cluster.replay(t, wl, codec=codec, lr=lr,
+                              eval_every=max(t.n_updates // 50, 1))
+               for t in traces]
+    target = results[0].final_loss   # sync's endpoint: who gets there first?
+    rows = []
+    for res in results:
+        rows.append({
+            "workload": "quadratic",
+            "protocol": res.protocol,
+            "makespan_s": round(res.makespan, 3),
+            "updates": res.updates_applied,
+            "max_staleness": res.max_staleness,
+            "wire_messages": res.n_wire_messages,
+            "final_loss": round(res.final_loss, 5),
+            "t_to_sync_loss_s": round(res.time_to(target), 3),
+        })
+    return rows
+
+
+def run_lm_sweep(*, rounds: int, smoke: bool, lr: float = 0.05,
+                 codec: str = "rq4") -> list[dict]:
+    spec = cluster.ClusterSpec(
+        n_workers=N, t_compute=1.0,
+        multipliers=cluster.straggler_multipliers(
+            N, factor=STRAGGLER_FACTOR),
+        t_lat=1e-2, t_tr=2e-3, size_mb=1.0, codec=codec)
+    wl = cluster.lm_workload(smoke=smoke)
+    rows = []
+    for proto, kw, r in [("sync_ps", {}, rounds),
+                         ("local_sgd", {"period_h": 2},
+                          max(rounds // 2, 1))]:
+        tr = cluster.make_protocol(proto, **kw).schedule(spec, rounds=r)
+        res = cluster.replay(tr, wl, codec=codec, lr=lr, eval_every=1)
+        rows.append({
+            "workload": wl.name,
+            "protocol": res.protocol,
+            "makespan_s": round(res.makespan, 3),
+            "updates": res.updates_applied,
+            "wire_messages": res.n_wire_messages,
+            "final_loss": round(res.final_loss, 4),
+        })
+    return rows
+
+
+def main(smoke: bool = False, lm: bool = False,
+         out_path: str = OUT_PATH) -> str:
+    rounds = 8 if smoke else 40
+    rows = run_quadratic_sweep(rounds=rounds)
+    if lm or smoke:   # smoke always exercises the LM replay path (tiny)
+        rows += run_lm_sweep(rounds=2 if smoke else rounds // 4,
+                             smoke=smoke or not lm)
+
+    print(f"# Virtual cluster: {N} workers, one {STRAGGLER_FACTOR:.0f}x "
+          f"straggler, fused rq4 codec (time-to-loss at equal wall-clock)")
+    print(f"{'workload':16s} {'protocol':10s} {'makespan':>9s} "
+          f"{'updates':>8s} {'stale':>6s} {'wire#':>7s} {'loss':>9s} "
+          f"{'t@sync':>8s}")
+    for r in rows:
+        print(f"{r['workload']:16s} {r['protocol']:10s} "
+              f"{r['makespan_s']:9.2f} {r['updates']:8d} "
+              f"{r.get('max_staleness', 0):6d} {r['wire_messages']:7d} "
+              f"{r['final_loss']:9.4f} "
+              f"{r.get('t_to_sync_loss_s', float('nan')):8.2f}")
+
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(out_path)}")
+    return ",".join(f"{r['protocol']}={r['final_loss']}" for r in rows)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny rounds/shapes (CI-scale)")
+    ap.add_argument("--lm", action="store_true",
+                    help="add the repro-100m LM sweep (reduced dims)")
+    ap.add_argument("--out", default=OUT_PATH,
+                    help="where to write BENCH_cluster.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, lm=args.lm, out_path=args.out)

@@ -1,14 +1,27 @@
 """Benchmark for Figures 1.3-1.7 / 3.4-3.5 / 4.1-4.2 / 5.2-5.3: the
 communication patterns under the §1.3 switch model, swept over worker count
-and latency/bandwidth regimes."""
+and latency/bandwidth regimes.
+
+Emits machine-readable ``BENCH_comm.json`` at the repo root (one row per
+(n, regime) cell plus the async-vs-sync Figure 4.1/4.2 summary); ``--smoke``
+shrinks the sweep to CI scale, where the job uploads the JSON as an
+artifact — same contract as kernels_bench / cluster_bench.
+"""
 from __future__ import annotations
 
-from repro.core import eventsim
+import argparse
+import json
+import os
+
+from repro.core import eventsim, mixing
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_comm.json")
 
 
-def sweep(size_mb: float = 100.0):
+def sweep(size_mb: float = 100.0, *, smoke: bool = False):
     rows = []
-    for n in (4, 8, 16, 64, 256):
+    for n in ((4, 8) if smoke else (4, 8, 16, 64, 256)):
         for (alpha, beta, regime) in ((1e-4, 1e-2, "bw-bound"),
                                       (1e-2, 1e-4, "lat-bound")):
             ps = eventsim.single_ps_makespan(n, size_mb, t_lat=alpha,
@@ -22,7 +35,12 @@ def sweep(size_mb: float = 100.0):
                 n, size_mb, t_lat=alpha, t_tr=beta, codec="rq8")
             dec = eventsim.decentralized_makespan(n, size_mb, t_lat=alpha,
                                                   t_tr=beta)
-            rows.append((n, regime, ps, ar, ar_nopart, csgd, dec))
+            # beyond-ring topology: the torus pays deg(W)=4 sends
+            dec_torus = eventsim.decentralized_makespan(
+                n, size_mb, t_lat=alpha, t_tr=beta,
+                w=mixing.torus_2d(*mixing.near_square_factors(n)))
+            rows.append((n, regime, ps, ar, ar_nopart, csgd, dec,
+                         dec_torus))
     return rows
 
 
@@ -38,20 +56,41 @@ def async_vs_sync(n: int = 8):
     return sync, async_tput, max_stale
 
 
-def main():
+def main(smoke: bool = False, out_path: str = OUT_PATH):
     print("# Communication patterns under the Section 1.3 switch model "
           "(makespan, seconds)")
     print(f"{'N':>4s} {'regime':>9s} {'PS':>10s} {'ringAR':>10s} "
-          f"{'AR-nopart':>10s} {'CSGD(4x)':>10s} {'DSGD':>10s}")
-    for n, regime, ps, ar, nop, csgd, dec in sweep():
+          f"{'AR-nopart':>10s} {'CSGD(4x)':>10s} {'DSGD':>10s} "
+          f"{'DSGD-torus':>10s}")
+    payload = []
+    for n, regime, ps, ar, nop, csgd, dec, dect in sweep(smoke=smoke):
         print(f"{n:4d} {regime:>9s} {ps:10.3f} {ar:10.3f} {nop:10.3f} "
-              f"{csgd:10.3f} {dec:10.3f}")
+              f"{csgd:10.3f} {dec:10.3f} {dect:10.3f}")
+        payload.append({"n": n, "regime": regime, "ps": round(ps, 4),
+                        "ring_ar": round(ar, 4),
+                        "ar_nopart": round(nop, 4),
+                        "csgd_rq8": round(csgd, 4),
+                        "dsgd_ring": round(dec, 4),
+                        "dsgd_torus": round(dect, 4)})
     sync, asyn, stale = async_vs_sync()
     print(f"\n# Figure 4.1/4.2 — sync vs async PS with one 4x straggler")
     print(f"sync updates/s {sync:.2f} | async updates/s {asyn:.2f} "
           f"(speedup {asyn / sync:.2f}x, max staleness {stale})")
+    payload.append({"fig": "4.1/4.2", "sync_updates_per_s": round(sync, 4),
+                    "async_updates_per_s": round(asyn, 4),
+                    "max_staleness": stale})
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(out_path)}")
     return f"async_speedup={asyn / sync:.2f}"
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-N sweep (CI-scale)")
+    ap.add_argument("--out", default=OUT_PATH,
+                    help="where to write BENCH_comm.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out_path=args.out)

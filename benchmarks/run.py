@@ -3,6 +3,8 @@
   table1_1        Table 1.1  iterations-to-eps + comm cost per relaxation
   table1_2        Table 1.2  GD/SGD/mb-SGD iteration vs query complexity
   comm_patterns   Figures 1.3-1.7, 3.4/3.5, 4.1/4.2, 5.2/5.3 (switch model)
+  cluster_bench   Figure 4.3-style time-to-loss on the virtual cluster
+                  (sync/async/local-SGD/DSGD/LAQ under a 4x straggler)
   kernels_bench   Pallas kernel micro-benchmarks (interpret tier)
   roofline        Deliverable (g): per-(arch x shape) roofline terms from
                   the compiled dry-run records
@@ -16,11 +18,12 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (comm_patterns, kernels_bench, roofline,
-                            table1_1, table1_2)
+    from benchmarks import (cluster_bench, comm_patterns, kernels_bench,
+                            roofline, table1_1, table1_2)
     csv_lines = []
     for name, mod in [("table1_1", table1_1), ("table1_2", table1_2),
                       ("comm_patterns", comm_patterns),
+                      ("cluster_bench", cluster_bench),
                       ("kernels_bench", kernels_bench),
                       ("roofline", roofline)]:
         print(f"\n===== {name} =====")

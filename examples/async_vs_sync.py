@@ -1,0 +1,66 @@
+"""Async vs sync vs local-SGD on a virtual cluster with one 4x straggler.
+
+One command, the whole Chapter 4 story: 8 heterogeneous workers are
+scheduled by the discrete-event cluster engine (repro.cluster), each trace
+is replayed as REAL training on the §1.1.3 quadratic with the fused rq4
+codec, and the table shows what the barrier costs — the straggler throttles
+sync-PS to its pace, async-PS keeps every port busy (more updates/s, real
+measured staleness), local-SGD(H=8) amortizes the barrier over H local
+steps.
+
+Run:  PYTHONPATH=src python examples/async_vs_sync.py
+"""
+import numpy as np
+
+from repro import cluster
+
+N = 8
+ROUNDS = 25
+LR = 0.1
+CODEC = "rq4"
+
+
+def main():
+    spec = cluster.ClusterSpec(
+        n_workers=N, t_compute=1.0,
+        multipliers=cluster.straggler_multipliers(N, factor=4.0),
+        t_lat=1e-2, t_tr=2e-3, size_mb=1.0, codec=CODEC)
+    wl = cluster.quadratic_workload(n_workers=N)
+
+    sync_tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=ROUNDS)
+    traces = {
+        "sync PS": sync_tr,
+        # async runs for exactly sync's simulated wall-clock
+        "async PS": cluster.make_protocol("async_ps").schedule(
+            spec, horizon=sync_tr.makespan),
+        "local-SGD H=8": cluster.make_protocol(
+            "local_sgd", period_h=8).schedule(spec, rounds=ROUNDS // 8),
+    }
+    results = {name: cluster.replay(t, wl, codec=CODEC, lr=LR,
+                                    eval_every=max(t.n_updates // 40, 1))
+               for name, t in traces.items()}
+
+    target = results["sync PS"].final_loss
+    print(f"{N} workers, one 4x straggler | switch model a={spec.t_lat}s "
+          f"b={spec.t_tr}s/MB | fused {CODEC} codec "
+          f"({spec.msg_mb():.3f} MB/msg on the wire)")
+    print(f"\n{'protocol':16s} {'updates/s':>10s} {'max stale':>10s} "
+          f"{'final loss':>11s} {'steps@sync-loss':>16s} "
+          f"{'t@sync-loss':>12s}")
+    for name, res in results.items():
+        tput = res.updates_applied / res.makespan
+        t_hit = res.time_to(target)
+        # applied updates until the curve first reaches sync's final loss
+        hit = np.nonzero(res.losses <= target)[0]
+        steps = ((hit[0] + 1) * max(res.updates_applied // len(res.losses), 1)
+                 if hit.size else res.updates_applied)
+        print(f"{name:16s} {tput:10.2f} {res.max_staleness:10d} "
+              f"{res.final_loss:11.5f} {steps:16d} {t_hit:12.2f}")
+    print("\nReading: the barrier makes sync pay the straggler every round; "
+          "async turns the\nsame wall-clock into many more applied updates "
+          "(at real, measured staleness) and\nreaches sync's final loss "
+          "first; local-SGD pays the barrier only every H steps.")
+
+
+if __name__ == "__main__":
+    main()

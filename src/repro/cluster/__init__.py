@@ -1,0 +1,25 @@
+"""Virtual cluster engine: event-driven heterogeneous workers running
+real async / local-SGD / decentralized training.
+
+  scheduler.py  discrete-event loop over the §1.3 switch model; emits a
+                Trace of (worker, version_pulled, version_applied,
+                staleness, t_wall) per applied gradient plus the full
+                per-message wire ledger (cross-checks eventsim).
+  protocols.py  registry of protocol objects (sync_ps / async_ps /
+                local_sgd / dsgd / laq), mirroring EXCHANGES.
+  execute.py    replays a Trace against real vmapped training (quadratic
+                or repro-100m LM) through the fused flat-codec gradient
+                path -> loss-vs-simulated-wall-clock curves.
+"""
+from repro.cluster.execute import (ClusterRunResult, Workload,
+                                   lm_workload, quadratic_workload, replay)
+from repro.cluster.protocols import (PROTOCOLS, make_protocol,
+                                     staleness_schedule)
+from repro.cluster.scheduler import (ClusterSpec, Trace, TraceEvent,
+                                     straggler_multipliers)
+
+__all__ = [
+    "ClusterRunResult", "ClusterSpec", "PROTOCOLS", "Trace", "TraceEvent",
+    "Workload", "lm_workload", "make_protocol", "quadratic_workload",
+    "replay", "staleness_schedule", "straggler_multipliers",
+]

@@ -1,0 +1,328 @@
+"""Replay a scheduler ``Trace`` against REAL training.
+
+The scheduler decides *when* and *at what staleness* every gradient lands;
+this module makes those gradients real: vmapped per-worker replicas
+compute minibatch gradients (the §1.1.3 quadratic or the repro-100m LM
+through ``train.steps.make_loss_fn``), every gradient ships through the
+fused flat-buffer Codec path (``Codec.tree_qdq_flat`` — ONE bucketed
+message per transfer, same bits as decode(encode(.))), and updates are
+applied in trace order at the trace's recorded staleness. The result is a
+loss-vs-simulated-wall-clock curve — the Figure 4.3-style "loss vs time"
+artifact the closed-form timelines could not produce.
+
+Replay semantics per protocol (dispatch on ``Trace.protocol``):
+
+  sync_ps   one model; per round all N workers' codec'd gradients are
+            averaged into one update (vmapped over the worker axis).
+  async_ps  one model + a version history ring; update k uses the
+            gradient computed at ``params[version_pulled]`` and applies
+            it to ``params[version_applied]`` — measured staleness, not
+            a worst-case FIFO.
+  local_sgd per-worker replicas take H codec'd local steps (vmapped),
+            then average at each sync event.
+  dsgd      per-worker replicas take one local step per round, then mix
+            X <- X W with the SAME matrix the scheduler costed.
+  laq       the server keeps each worker's last uploaded (codec'd)
+            gradient; only the trace's senders refresh theirs each round
+            — the others are reused stale, the LAQ relaxation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.scheduler import Trace
+from repro.core import compression
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One trainable problem: initial params, a per-worker minibatch
+    gradient (key -> batch is drawn inside), and a deterministic eval
+    loss for the curves."""
+
+    name: str
+    params0: PyTree
+    grad_fn: Callable[[PyTree, jax.Array], PyTree]
+    eval_loss: Callable[[PyTree], jnp.ndarray]
+
+
+def quadratic_workload(*, n_workers: int = 8, d: int = 32, m: int = 1024,
+                       batch: int = 4, noise: float = 0.1,
+                       heterogeneity: float = 0.0,
+                       seed: int = 0) -> Workload:
+    """The paper's §1.1.3 distributed least-squares testbed."""
+    from repro.core import parallel
+
+    prob = parallel.Quadratic.make(
+        jax.random.PRNGKey(seed), m=m, d=d, noise=noise,
+        heterogeneity=heterogeneity, n_workers=n_workers)
+
+    def grad_fn(params, key):
+        idx = jax.random.randint(key, (batch,), 0, m)
+        return jax.grad(prob.loss_on)(params, idx)
+
+    return Workload("quadratic", jnp.zeros((d,)), grad_fn, prob.full_loss)
+
+
+def lm_workload(*, smoke: bool = True, batch: int = 2, seq: int = 32,
+                seed: int = 0) -> Workload:
+    """repro-100m language model (``reduced()`` dims under smoke) through
+    the production loss path (train.steps.make_loss_fn); batches are
+    synthetic next-token streams drawn from the key."""
+    from repro import configs
+    from repro.models import transformer
+    from repro.train import steps as train_steps
+
+    cfg = configs.get_config("repro-100m")
+    if smoke:
+        cfg = cfg.reduced(n_layers=2, d_model=128, vocab=256)
+    loss = train_steps.make_loss_fn(cfg)
+    params0 = transformer.init(cfg, jax.random.PRNGKey(seed))
+
+    def make_batch(key):
+        tokens = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab)
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def grad_fn(params, key):
+        return jax.grad(loss)(params, make_batch(key))
+
+    eval_batch = make_batch(jax.random.PRNGKey(seed + 1))
+
+    def eval_loss(params):
+        return loss(params, eval_batch)
+
+    return Workload("repro-100m" + ("-reduced" if smoke else ""),
+                    params0, grad_fn, eval_loss)
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterRunResult:
+    """A loss-vs-simulated-wall-clock curve plus the trace's vitals."""
+
+    protocol: str
+    t_wall: np.ndarray          # eval times (simulated seconds)
+    losses: np.ndarray          # eval loss at those times
+    updates_applied: int
+    max_staleness: int
+    makespan: float
+    n_wire_messages: int
+
+    @property
+    def final_loss(self) -> float:
+        return float(self.losses[-1])
+
+    def time_to(self, target: float) -> float:
+        """First simulated time the eval loss reaches `target` (inf if
+        never) — the time-to-loss metric of the cluster benchmark."""
+        hit = np.nonzero(self.losses <= target)[0]
+        return float(self.t_wall[hit[0]]) if hit.size else float("inf")
+
+
+def _sub(params, upd, lr):
+    return jax.tree_util.tree_map(lambda p, u: p - lr * u, params, upd)
+
+
+def _stack(params, n):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params)
+
+
+def _mean0(params_w):
+    return jax.tree_util.tree_map(lambda p: p.mean(0), params_w)
+
+
+def replay(trace: Trace, workload: Workload, *, codec: str = "rq4",
+           lr: float = 0.1, eval_every: int = 1, seed: int = 0,
+           mixing_w: Optional[np.ndarray] = None) -> ClusterRunResult:
+    """Train `workload` exactly as `trace` dictates; see module docstring.
+
+    ``eval_every`` thins the eval cadence (every k applied updates for
+    async, every k rounds otherwise). ``mixing_w`` overrides the dsgd
+    replay matrix (default: the matrix the trace was scheduled with —
+    dsgd traces carry W in their extras)."""
+    cdc = compression.codec(codec)
+    root = jax.random.PRNGKey(seed)
+    n = trace.n_workers
+
+    def wkey(worker, step):
+        return jax.random.fold_in(jax.random.fold_in(root, worker), step)
+
+    def qgrad(params, key):
+        """One worker's gradient through the fused flat-codec wire."""
+        return cdc.tree_qdq_flat(workload.grad_fn(params, key),
+                                 jax.random.fold_in(key, 7))
+
+    replays = {"sync_ps": _replay_sync, "async_ps": _replay_async,
+               "local_sgd": _replay_local_sgd, "dsgd": _replay_dsgd,
+               "laq": _replay_laq}
+    if trace.protocol not in replays:
+        raise KeyError(f"no replay for protocol '{trace.protocol}'")
+    ts, losses = replays[trace.protocol](
+        trace, workload, qgrad, lr=lr, eval_every=eval_every, n=n,
+        wkey=wkey, mixing_w=mixing_w)
+    return ClusterRunResult(trace.protocol, np.asarray(ts),
+                            np.asarray(losses, dtype=float),
+                            trace.n_updates, trace.max_staleness,
+                            trace.makespan, len(trace.messages))
+
+
+def _sync_times(trace, kinds=("sync", "gossip")):
+    return [e.t_wall for e in trace.events if e.kind in kinds]
+
+
+def _replay_sync(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                 mixing_w):
+    del mixing_w
+    rounds = trace.extra("rounds")
+
+    @jax.jit
+    def round_step(params, r):
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        q_w = jax.vmap(lambda k: qgrad(params, k))(keys)
+        return _sub(params, _mean0(q_w), lr)
+
+    params = workload.params0
+    ts, losses = [], []
+    t_sync = _sync_times(trace)
+    for r in range(rounds):
+        params = round_step(params, r)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            ts.append(t_sync[r])
+            losses.append(float(workload.eval_loss(params)))
+    return ts, losses
+
+
+def _replay_async(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                  mixing_w):
+    del n, mixing_w
+
+    @jax.jit
+    def apply_one(p_pulled, p_cur, key):
+        return _sub(p_cur, qgrad(p_pulled, key), lr)
+
+    events = trace.updates()
+    keep = trace.max_staleness + 2
+    hist = {0: workload.params0}
+    params = workload.params0
+    version = 0
+    ts, losses = [], []
+    for i, e in enumerate(events):
+        if e.version_applied != version:
+            raise ValueError("trace apply order is inconsistent "
+                             f"({e.version_applied} != {version})")
+        params = apply_one(hist[e.version_pulled], params,
+                           wkey(e.worker, e.step))
+        version += 1
+        hist[version] = params
+        hist.pop(version - keep, None)
+        if (i + 1) % eval_every == 0 or i == len(events) - 1:
+            ts.append(e.t_wall)
+            losses.append(float(workload.eval_loss(params)))
+    return ts, losses
+
+
+def _replay_local_sgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                      mixing_w):
+    del mixing_w
+    rounds, h = trace.extra("rounds"), trace.extra("period_h")
+
+    @jax.jit
+    def local_step(params_w, step):
+        keys = jax.vmap(lambda w: wkey(w, step))(jnp.arange(n))
+        return jax.vmap(lambda p, k: _sub(p, qgrad(p, k), lr))(params_w,
+                                                               keys)
+
+    @jax.jit
+    def average(params_w):
+        return _stack(_mean0(params_w), n)
+
+    params_w = _stack(workload.params0, n)
+    ts, losses = [], []
+    t_sync = _sync_times(trace)
+    for r in range(rounds):
+        for k in range(h):
+            params_w = local_step(params_w, r * h + k)
+        params_w = average(params_w)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            ts.append(t_sync[r])
+            losses.append(float(workload.eval_loss(_mean0(params_w))))
+    return ts, losses
+
+
+def _replay_dsgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                 mixing_w):
+    rounds = trace.extra("rounds")
+    if mixing_w is None:
+        # the matrix the scheduler costed rides in the trace itself
+        mixing_w = np.asarray(trace.extra("w"))
+    w_mat = jnp.asarray(np.asarray(mixing_w), jnp.float32)
+
+    @jax.jit
+    def round_step(params_w, r):
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        stepped = jax.vmap(lambda p, k: _sub(p, qgrad(p, k), lr))(params_w,
+                                                                  keys)
+        # X <- X W on the stacked worker axis (Eq. 5.2)
+        return jax.tree_util.tree_map(
+            lambda p: jnp.tensordot(w_mat, p, axes=[[1], [0]]), stepped)
+
+    params_w = _stack(workload.params0, n)
+    ts, losses = [], []
+    t_sync = _sync_times(trace)
+    for r in range(rounds):
+        params_w = round_step(params_w, r)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            ts.append(t_sync[r])
+            losses.append(float(workload.eval_loss(_mean0(params_w))))
+    return ts, losses
+
+
+def _replay_laq(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                mixing_w):
+    del mixing_w
+    rounds = trace.extra("rounds")
+    senders_by_round = np.zeros((rounds, n), bool)
+    for e in trace.updates():
+        senders_by_round[e.step, e.worker] = True
+
+    @jax.jit
+    def round_step(params, stored_w, mask, r):
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        q_w = jax.vmap(lambda k: qgrad(params, k))(keys)
+        # only the trace's senders refresh their stored gradient; the
+        # server reuses the rest stale (the LAQ relaxation)
+        stored_w = jax.tree_util.tree_map(
+            lambda s, q: jnp.where(
+                mask.reshape((n,) + (1,) * (q.ndim - 1)), q, s),
+            stored_w, q_w)
+        return _sub(params, _mean0(stored_w), lr), stored_w
+
+    params = workload.params0
+    stored_w = _stack(jax.tree_util.tree_map(jnp.zeros_like,
+                                             workload.params0), n)
+    ts, losses = [], []
+    t_sync = _sync_times(trace)
+    for r in range(rounds):
+        params, stored_w = round_step(params, stored_w,
+                                      jnp.asarray(senders_by_round[r]), r)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            ts.append(t_sync[r])
+            losses.append(float(workload.eval_loss(params)))
+    return ts, losses

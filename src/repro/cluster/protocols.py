@@ -1,0 +1,168 @@
+"""Protocol registry for the virtual cluster — mirrors ``EXCHANGES``.
+
+Each protocol is a frozen dataclass holding its hyper-parameters (local
+period H, gossip matrix, LAQ skip, ...) with two duties:
+
+  * ``schedule(spec, *, rounds=..., horizon=...)`` — run the discrete-
+    event loop of ``repro.cluster.scheduler`` and return a ``Trace``;
+  * name the replay semantics ``repro.cluster.execute.replay`` dispatches
+    on (``Trace.protocol``).
+
+``PROTOCOLS`` / ``make_protocol`` follow the exact conventions of
+``repro.core.communicators.EXCHANGES`` / ``make_exchange`` so the two
+registries read the same:
+
+    make_protocol("local_sgd", period_h=8).schedule(spec, rounds=20)
+
+``staleness_schedule`` bridges the scheduler back into the algorithm
+tier: it converts a measured async trace into the per-worker delay table
+a trace-driven ``DelayedExchange(schedule=...)`` replays (Assumption 5
+with D(t) taken from the cluster instead of the worst case).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.cluster import scheduler
+from repro.cluster.scheduler import ClusterSpec, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPS:
+    """Synchronous parameter server (§1.3.2): the barrier baseline."""
+
+    name: str = "sync_ps"
+
+    def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
+                 horizon: Optional[float] = None) -> Trace:
+        del horizon
+        return scheduler.schedule_sync_ps(spec, rounds=rounds)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncPS:
+    """Asynchronous parameter server (§4.1): no barrier, real staleness."""
+
+    name: str = "async_ps"
+
+    def schedule(self, spec: ClusterSpec, *, rounds: Optional[int] = None,
+                 horizon: Optional[float] = None) -> Trace:
+        if horizon is None:
+            if rounds is None:
+                raise ValueError("async_ps needs horizon= (or rounds= to "
+                                 "borrow the sync-PS makespan)")
+            # equal-wall-clock convention: run as long as sync-PS would
+            horizon = scheduler.schedule_sync_ps(spec, rounds=rounds).makespan
+        return scheduler.schedule_async_ps(spec, horizon=horizon)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSGD:
+    """Local SGD with period H: H local steps between averaging rounds."""
+
+    period_h: int = 8
+    name: str = "local_sgd"
+
+    def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
+                 horizon: Optional[float] = None) -> Trace:
+        del horizon
+        return scheduler.schedule_local_sgd(spec, period_h=self.period_h,
+                                            rounds=rounds)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decentralized:
+    """DSGD gossip rounds (§5.1) over any ``mixing.py`` matrix.
+
+    ``topology`` in {'ring', 'torus', 'full'} builds the matrix from the
+    axis size; an explicit ``w`` (nested tuple / array) wins. The same
+    matrix drives both the comm cost (deg(W) sends per round) and the
+    replay's mixing step, and matches what ``GossipMix`` lowers to
+    ppermutes."""
+
+    topology: str = "ring"
+    w: Any = None
+    name: str = "dsgd"
+
+    def __post_init__(self):
+        if self.w is not None:
+            w = np.asarray(self.w, dtype=float)
+            object.__setattr__(self, "w",
+                               tuple(tuple(row) for row in w.tolist()))
+
+    def matrix(self, n: int) -> np.ndarray:
+        from repro.core import mixing
+
+        if self.w is not None:
+            w = np.asarray(self.w)
+            if w.shape != (n, n):
+                raise ValueError(f"W is {w.shape}, cluster has {n} workers")
+            return w
+        if self.topology == "ring":
+            return mixing.ring(n)
+        if self.topology == "torus":
+            return mixing.torus_2d(*mixing.near_square_factors(n))
+        if self.topology == "full":
+            return mixing.fully_connected(n)
+        raise ValueError(f"unknown topology {self.topology}")
+
+    def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
+                 horizon: Optional[float] = None) -> Trace:
+        del horizon
+        return scheduler.schedule_decentralized(
+            spec, rounds=rounds, w=self.matrix(spec.n_workers))
+
+
+@dataclasses.dataclass(frozen=True)
+class LAQ:
+    """Lazily aggregated sync PS: each worker uploads every `skip`-th
+    round; the server reuses stored gradients in between."""
+
+    skip: int = 2
+    name: str = "laq"
+
+    def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
+                 horizon: Optional[float] = None) -> Trace:
+        del horizon
+        return scheduler.schedule_laq(spec, rounds=rounds, skip=self.skip)
+
+
+PROTOCOLS: dict[str, Callable[..., Any]] = {
+    "sync_ps": SyncPS,
+    "async_ps": AsyncPS,
+    "local_sgd": LocalSGD,
+    "dsgd": Decentralized,
+    "laq": LAQ,
+}
+
+
+def make_protocol(name: str, **kw) -> Any:
+    if name not in PROTOCOLS:
+        raise KeyError(f"unknown protocol '{name}'; have {sorted(PROTOCOLS)}")
+    return PROTOCOLS[name](**kw)
+
+
+def staleness_schedule(trace: Trace, *, tau: Optional[int] = None
+                       ) -> np.ndarray:
+    """Per-worker staleness table for ``DelayedExchange(schedule=...)``.
+
+    Row w holds worker w's measured staleness sequence from the trace,
+    clipped to ``tau`` (default: the trace's own max — Assumption 5's
+    bound as observed) and padded by repeating its last value so every
+    row has equal length T. Feeding this to the algorithm tier replays
+    the cluster's delay distribution through a vmapped exchange instead
+    of the fixed worst-case FIFO."""
+    ups = trace.updates()
+    if not ups:
+        raise ValueError("trace has no update events")
+    bound = trace.max_staleness if tau is None else tau
+    rows = []
+    t_max = max(len(trace.updates_of(w)) for w in range(trace.n_workers))
+    for w in range(trace.n_workers):
+        s = [min(e.staleness, bound) for e in trace.updates_of(w)] or [0]
+        s = s + [s[-1]] * (t_max - len(s))
+        rows.append(s)
+    return np.asarray(rows, dtype=int)

@@ -1,0 +1,399 @@
+"""Discrete-event scheduler for a virtual cluster of heterogeneous workers.
+
+This generalizes ``eventsim.async_ps_timeline`` (a closed-form heapq
+walk-through of Figure 4.2) into a protocol-pluggable event loop over the
+same §1.3 switch model: N workers with per-(worker, step) compute times —
+deterministic straggler multipliers x seeded lognormal jitter — exchange
+messages whose port occupancy is costed by ``eventsim.simulate`` (round
+protocols) or the PS send/recv ports directly (the async loop). Every
+protocol emits a ``Trace``:
+
+  * ``events`` — one ``TraceEvent`` per applied gradient
+    ``(worker, step, version_pulled, version_applied, staleness, t_wall)``,
+    sorted by apply time. ``staleness = version_applied - version_pulled``
+    is the paper's D(t) (Assumption 5); sync protocols keep it 0.
+  * ``comm`` / ``messages`` — the ``eventsim.Delivery`` and per-wire
+    ``eventsim.MsgRecord`` ledgers of every transfer, so scheduler and
+    eventsim timings cross-check: the sync-PS makespan with zero compute
+    IS ``eventsim.single_ps_makespan`` (same simulate() calls, asserted
+    in tests/test_cluster.py to 1e-9).
+
+The trace is pure timing/ordering — no gradients exist here. Feeding it to
+``repro.cluster.execute.replay`` turns it into REAL training (vmapped
+per-worker replicas, fused flat-codec gradient path) with loss plotted
+against this file's simulated wall-clock.
+
+Protocols (see ``repro.cluster.protocols`` for the registry objects):
+
+  sync_ps        rounds of compute -> uplink -> gated broadcast (§1.3.2)
+  async_ps       free-running pull/compute/push per worker (§4.1)
+  local_sgd      H local steps between averaging rounds (§4/LocalSGD)
+  decentralized  gossip rounds over ANY mixing.py matrix W (§5.1)
+  laq            sync PS where each worker uploads every `skip`-th round
+                 (round-robin lazy aggregation a la LAQ, arXiv 1909.07588;
+                 the server reuses the stored gradient in between)
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import eventsim
+
+PS = -1   # symbolic parameter-server id in TraceEvents (msgs use index n)
+
+
+# ---------------------------------------------------------------------------
+# Cluster description: who computes how fast, what a message costs
+# ---------------------------------------------------------------------------
+
+
+def straggler_multipliers(n: int, *, straggler: Optional[int] = None,
+                          factor: float = 4.0) -> tuple:
+    """Per-worker speed multipliers: all 1.0 with worker `straggler`
+    (default: the last one) `factor`x slower — the Figure 4.1/4.2 setup."""
+    m = [1.0] * n
+    m[straggler if straggler is not None else n - 1] = factor
+    return tuple(m)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """N heterogeneous workers hanging off one §1.3 switch.
+
+    ``multipliers`` is the deterministic straggler model (per-worker slow-
+    down of the base ``t_compute``); ``jitter`` adds seeded lognormal
+    noise per (worker, step) — ``exp(N(0, jitter))``, median 1 — so
+    stragglers can be persistent, stochastic, or both. ``size_mb`` is the
+    fp32 gradient/model message; pass ``codec`` to replace it with the
+    measured wire size of the packed payload (``Codec.wire_bytes``),
+    exactly like the eventsim builders.
+    """
+
+    n_workers: int = 8
+    t_compute: float = 1.0
+    multipliers: tuple = ()        # () -> homogeneous
+    jitter: float = 0.0            # lognormal sigma
+    t_lat: float = 1e-2
+    t_tr: float = 2e-3             # s/MB at the NIC
+    size_mb: float = 1.0
+    codec: Optional[str] = None    # measured wire size instead of size_mb
+    n_messages: int = 1            # wire messages per logical transfer
+    seed: int = 0
+
+    def multiplier(self, worker: int) -> float:
+        if not self.multipliers:
+            return 1.0
+        return float(self.multipliers[worker])
+
+    def compute_time(self, worker: int, step: int) -> float:
+        """Duration of one local gradient computation. Deterministic in
+        (seed, worker, step) regardless of event-loop visit order."""
+        base = self.t_compute * self.multiplier(worker)
+        if self.jitter > 0.0:
+            rng = np.random.default_rng((self.seed, worker, step))
+            base *= float(rng.lognormal(0.0, self.jitter))
+        return base
+
+    def msg_mb(self) -> float:
+        """Wire MB of one gradient/model message (codec-measured if set)."""
+        if self.codec is not None:
+            n_el = max(1, int(self.size_mb * 1e6 / 4.0))
+            return eventsim.wire_size_mb(self.codec, n_el)
+        return self.size_mb
+
+    def msg_cost(self) -> float:
+        """Port occupancy of one logical transfer."""
+        return self.n_messages * self.t_lat + self.msg_mb() * self.t_tr
+
+
+# ---------------------------------------------------------------------------
+# Trace schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One applied gradient (kind='update') or a barrier marker.
+
+    kind:            'update' | 'sync' (averaging barrier) | 'gossip'
+    worker:          worker id (PS = -1 for barrier markers)
+    step:            worker-local step index
+    version_pulled:  model version the gradient was computed at
+    version_applied: model version it was applied to
+    staleness:       version_applied - version_pulled (Assumption 5's D(t))
+    t_wall:          simulated wall-clock of the apply
+    """
+
+    kind: str
+    worker: int
+    step: int
+    version_pulled: int
+    version_applied: int
+    staleness: int
+    t_wall: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    protocol: str
+    n_workers: int
+    events: tuple                  # TraceEvent, sorted by t_wall
+    comm: tuple                    # eventsim.Delivery ledger
+    messages: tuple                # eventsim.MsgRecord per-wire ledger
+    makespan: float
+    extras: tuple = ()             # protocol knobs as (name, value) pairs
+
+    def updates(self) -> list:
+        return [e for e in self.events if e.kind == "update"]
+
+    @property
+    def n_updates(self) -> int:
+        return len(self.updates())
+
+    @property
+    def max_staleness(self) -> int:
+        ups = self.updates()
+        return max((e.staleness for e in ups), default=0)
+
+    def updates_of(self, worker: int) -> list:
+        return [e for e in self.updates() if e.worker == worker]
+
+    def extra(self, name: str):
+        return dict(self.extras)[name]
+
+
+def _sorted_events(events: list) -> tuple:
+    return tuple(sorted(events, key=lambda e: (e.t_wall, e.worker, e.step)))
+
+
+# ---------------------------------------------------------------------------
+# Round-synchronous protocols (compute phase + eventsim-costed comm phase)
+# ---------------------------------------------------------------------------
+
+
+def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1) -> Trace:
+    """§1.3.2 synchronous PS: every round is compute -> uplink (serialized
+    at the PS recv port) -> broadcast gated on full aggregation.
+
+    With zero compute and one round this is *identical arithmetic* to
+    ``eventsim.single_ps_makespan`` (same two simulate() calls), which is
+    the scheduler<->eventsim cross-check tests pin to 1e-9.
+    """
+    n, ps, s = spec.n_workers, spec.n_workers, spec.msg_mb()
+    t = 0.0
+    version = 0
+    events: list = []
+    comm: list = []
+    recs: list = []
+    for r in range(rounds):
+        done = [t + spec.compute_time(w, r) for w in range(n)]
+        up = eventsim.simulate(
+            [eventsim.Msg(done[w], w, ps, s, f"agg{r}", spec.n_messages)
+             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+        t_agg = up.makespan
+        down = eventsim.simulate(
+            [eventsim.Msg(t_agg, ps, w, s, f"bc{r}", spec.n_messages)
+             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+        comm += list(up.deliveries) + list(down.deliveries)
+        recs += list(up.messages) + list(down.messages)
+        for d in up.deliveries:
+            events.append(TraceEvent("update", d.src, r, version, version,
+                                     0, d.t_end))
+        version += 1
+        t = down.makespan
+        events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
+    return Trace("sync_ps", n, _sorted_events(events), tuple(comm),
+                 tuple(recs), t, (("rounds", rounds),))
+
+
+def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
+                       rounds: int = 1) -> Trace:
+    """Local SGD: H local steps per worker between model-averaging rounds
+    (the §4 relaxation that trades staleness for H-fold fewer barriers).
+    Each local step is an applied update on that worker's replica; the
+    averaging round is a PS-pattern exchange of the MODEL."""
+    n, ps, s = spec.n_workers, spec.n_workers, spec.msg_mb()
+    t = 0.0
+    version = 0
+    events: list = []
+    comm: list = []
+    recs: list = []
+    for r in range(rounds):
+        done = [t] * n
+        for h in range(period_h):
+            step = r * period_h + h
+            for w in range(n):
+                done[w] += spec.compute_time(w, step)
+                events.append(TraceEvent("update", w, step, version,
+                                         version, 0, done[w]))
+        up = eventsim.simulate(
+            [eventsim.Msg(done[w], w, ps, s, f"agg{r}", spec.n_messages)
+             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+        down = eventsim.simulate(
+            [eventsim.Msg(up.makespan, ps, w, s, f"bc{r}", spec.n_messages)
+             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+        comm += list(up.deliveries) + list(down.deliveries)
+        recs += list(up.messages) + list(down.messages)
+        version += 1
+        t = down.makespan
+        events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
+    return Trace("local_sgd", n, _sorted_events(events), tuple(comm),
+                 tuple(recs), t,
+                 (("rounds", rounds), ("period_h", period_h)))
+
+
+def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,
+                           w: Optional[np.ndarray] = None) -> Trace:
+    """§5.1 DSGD gossip rounds over any mixing matrix W (default: the
+    paper's ring W2): each round every worker takes one local step, then
+    ships its FULL model to each W-neighbor (deg(W) sends, serialized at
+    its send port — O(1) in N for sparse W)."""
+    from repro.core import mixing
+
+    n, s = spec.n_workers, spec.msg_mb()
+    w_mat = mixing.ring(n) if w is None else np.asarray(w)
+    nbrs = [[j for j in range(n) if j != i and abs(w_mat[j, i]) > 1e-12]
+            for i in range(n)]   # i sends to every j weighting x_i
+    t = 0.0
+    events: list = []
+    comm: list = []
+    recs: list = []
+    for r in range(rounds):
+        done = [t + spec.compute_time(i, r) for i in range(n)]
+        for i in range(n):
+            events.append(TraceEvent("update", i, r, r, r, 0, done[i]))
+        res = eventsim.simulate(
+            [eventsim.Msg(done[i], i, j, s, f"gossip{r}", spec.n_messages)
+             for i in range(n) for j in nbrs[i]],
+            t_lat=spec.t_lat, t_tr=spec.t_tr)
+        comm += list(res.deliveries)
+        recs += list(res.messages)
+        t = res.makespan
+        events.append(TraceEvent("gossip", PS, r, r, r + 1, 0, t))
+    # the trace carries W itself (nested tuple) so the replay mixes with
+    # exactly the matrix whose comm cost was charged here
+    w_rows = tuple(tuple(row) for row in w_mat.tolist())
+    return Trace("dsgd", n, _sorted_events(events), tuple(comm),
+                 tuple(recs), t,
+                 (("rounds", rounds), ("degree", mixing.degree(w_mat)),
+                  ("w", w_rows)))
+
+
+def schedule_laq(spec: ClusterSpec, *, rounds: int = 1,
+                 skip: int = 2) -> Trace:
+    """LAQ-style lazy aggregation (arXiv 1909.07588), deterministic
+    round-robin variant: worker w uploads only on rounds where
+    ``(r - w) % skip == 0``; in between the server reuses w's stored
+    gradient (the replay does exactly that). The broadcast still reaches
+    everyone, so versions advance every round but the uplink carries
+    ~n/skip messages instead of n. The gradient-norm trigger of real LAQ
+    needs the training loop (execute.py) — the scheduler models its
+    communication-thinning effect."""
+    n, ps, s = spec.n_workers, spec.n_workers, spec.msg_mb()
+    t = 0.0
+    version = 0
+    last_sent = [0] * n
+    events: list = []
+    comm: list = []
+    recs: list = []
+    for r in range(rounds):
+        senders = [w for w in range(n) if (r - w) % skip == 0]
+        done = {w: t + spec.compute_time(w, r) for w in senders}
+        up = eventsim.simulate(
+            [eventsim.Msg(done[w], w, ps, s, f"agg{r}", spec.n_messages)
+             for w in senders], t_lat=spec.t_lat, t_tr=spec.t_tr)
+        t_agg = up.makespan if senders else t
+        down = eventsim.simulate(
+            [eventsim.Msg(t_agg, ps, w, s, f"bc{r}", spec.n_messages)
+             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+        comm += list(up.deliveries) + list(down.deliveries)
+        recs += list(up.messages) + list(down.messages)
+        for d in up.deliveries:
+            w = d.src
+            # version_pulled = the version of the gradient the server had
+            # been lazily reusing for w; this fresh upload retires it
+            # after `staleness` rounds of service
+            events.append(TraceEvent("update", w, r, last_sent[w], version,
+                                     version - last_sent[w], d.t_end))
+            last_sent[w] = version
+        version += 1
+        t = down.makespan
+        events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
+    return Trace("laq", n, _sorted_events(events), tuple(comm),
+                 tuple(recs), t, (("rounds", rounds), ("skip", skip)))
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous PS (the free-running §4.1 loop, generalized from
+# eventsim.async_ps_timeline to heterogeneous per-step compute times)
+# ---------------------------------------------------------------------------
+
+
+def schedule_async_ps(spec: ClusterSpec, *, horizon: float) -> Trace:
+    """§4.1 async PS: each worker loops pull -> compute -> push with no
+    barrier; pulls serialize at the PS send port, pushes at its recv port.
+    Staleness of an update = applied updates since its worker pulled.
+
+    With homogeneous multipliers and zero jitter this reproduces
+    ``eventsim.async_ps_timeline`` event for event (asserted in tests) —
+    that closed-form walk-through is the special case this loop
+    generalizes. One difference: updates whose APPLY lands past `horizon`
+    are dropped (the timeline helper cuts on request time only), so
+    ``makespan <= horizon`` always holds and equal-wall-clock comparisons
+    against a sync trace are not biased by a message draining after the
+    cutoff."""
+    n = spec.n_workers
+    msg = spec.msg_cost()
+    s = spec.msg_mb()
+    ps = n
+    ps_send_free = 0.0
+    ps_recv_free = 0.0
+    version = 0
+    versions_at_pull = [0] * n
+    steps = [0] * n
+    events: list = []
+    comm: list = []
+    recs: list = []
+
+    def record(t0: float, src: int, dst: int, tag: str) -> None:
+        comm.append(eventsim.Delivery(t0, t0 + msg, src, dst, s, tag))
+        recs.extend(eventsim.split_msg_records(t0, src, dst, s, tag,
+                                               spec.n_messages,
+                                               t_lat=spec.t_lat,
+                                               t_tr=spec.t_tr))
+
+    q: list = [(0.0, i, "pull", i) for i in range(n)]
+    heapq.heapify(q)
+    seq = n
+    while q:
+        t, _, kind, w = heapq.heappop(q)
+        if t > horizon:
+            continue
+        if kind == "pull":
+            t0 = max(t, ps_send_free)
+            ps_send_free = t0 + msg
+            record(t0, ps, w, f"pull{w}.{steps[w]}")
+            versions_at_pull[w] = version
+            t_next = t0 + msg + spec.compute_time(w, steps[w])
+            heapq.heappush(q, (t_next, seq, "push", w))
+        else:
+            t0 = max(t, ps_recv_free)
+            t_applied = t0 + msg
+            if t_applied > horizon:   # would land after the cutoff
+                continue
+            ps_recv_free = t_applied
+            record(t0, w, ps, f"push{w}.{steps[w]}")
+            events.append(TraceEvent(
+                "update", w, steps[w], versions_at_pull[w], version,
+                version - versions_at_pull[w], t_applied))
+            version += 1
+            steps[w] += 1
+            heapq.heappush(q, (t_applied, seq, "pull", w))
+        seq += 1
+    makespan = max((e.t_wall for e in events), default=0.0)
+    return Trace("async_ps", n, _sorted_events(events), tuple(comm),
+                 tuple(recs), makespan, (("horizon", horizon),))

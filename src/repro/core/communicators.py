@@ -297,25 +297,57 @@ class ECSGDExchange:
 class DelayedExchange:
     """Bounded-staleness wrapper (ASGD, Section 4, Assumption 5).
 
-    Maintains a length-tau FIFO of exchanged gradients; the update returned at
-    step t is the one computed at step t - tau (the D(t) = t - tau worst case).
-    The first tau steps replay the oldest available gradient of the warmup
-    buffer (zeros), matching an idle-start cluster.
+    Default (``schedule=None``): a length-tau FIFO — the update returned at
+    step t is the one computed at step t - tau (the D(t) = t - tau worst
+    case). The first tau steps replay the oldest available gradient of the
+    warmup buffer (zeros), matching an idle-start cluster.
+
+    ``schedule``: TRACE-DRIVEN per-step staleness. A 1-D sequence s_t (all
+    workers share it) or a 2-D (n_workers, T) table (row per worker) of
+    integer delays, each clipped to [0, tau] (Assumption 5's bound); the
+    update returned at step t is the one computed at step t - s_t, with
+    zeros before the cluster produced one. This is how a measured
+    ``repro.cluster`` scheduler trace (staleness column of its
+    TraceEvents) is replayed through the algorithm tier — see
+    ``repro.cluster.protocols.staleness_schedule``. Steps past the end of
+    the schedule wrap around (periodic replay).
     """
 
     inner: Any = dataclasses.field(default_factory=MbSGDExchange)
     tau: int = 4
     name: str = "asgd"
+    schedule: Any = None      # None | 1-D | 2-D ints; tuple-ized below
+
+    def __post_init__(self):
+        if self.schedule is not None:
+            import numpy as np
+            s = np.asarray(self.schedule, dtype=int)
+            if s.ndim == 1:
+                sched = tuple(int(v) for v in s)
+            elif s.ndim == 2:
+                sched = tuple(tuple(int(v) for v in row) for row in s)
+            else:
+                raise ValueError("schedule must be 1-D or 2-D")
+            # nested tuple keeps the frozen dataclass hashable
+            object.__setattr__(self, "schedule", sched)
+
+    def _cap(self) -> int:
+        # schedule mode needs tau+1 slots: s=0 must read the value written
+        # THIS step, while s=tau still reads step t-tau un-clobbered
+        return self.tau + 1 if self.schedule is not None else max(self.tau, 1)
 
     def init(self, params: PyTree) -> PyTree:
         buf = jax.tree_util.tree_map(
-            lambda p: jnp.zeros((max(self.tau, 1),) + p.shape, p.dtype), params)
+            lambda p: jnp.zeros((self._cap(),) + p.shape, p.dtype), params)
         return {"inner": self.inner.init(params), "buffer": buf,
                 "head": jnp.zeros((), jnp.int32)}
 
     def __call__(self, grad, state, key, *, axis_name):
         fresh, inner_state = self.inner(grad, state["inner"], key,
                                         axis_name=axis_name)
+        if self.schedule is not None:
+            return self._delayed_by_schedule(fresh, state, inner_state,
+                                             axis_name)
         if self.tau <= 0:
             return fresh, {"inner": inner_state, "buffer": state["buffer"],
                            "head": state["head"]}
@@ -328,6 +360,38 @@ class DelayedExchange:
             state["buffer"], fresh)
         return stale, {"inner": inner_state, "buffer": buf,
                        "head": (head + 1) % self.tau}
+
+    def _delayed_by_schedule(self, fresh, state, inner_state, axis_name):
+        """Write fresh at slot t mod (tau+1), read slot (t - s_t)."""
+        step = state["head"]          # reused as the step counter
+        sched = jnp.asarray(self.schedule, jnp.int32)
+        if sched.ndim == 2:
+            n = _axis_size(axis_name)
+            if sched.shape[0] != n:
+                # without this, jax's clamping gather would silently give
+                # out-of-range workers the last row's delays
+                raise ValueError(f"2-D schedule has {sched.shape[0]} rows "
+                                 f"but the '{axis_name}' axis has {n} "
+                                 "workers")
+            s_t = sched[lax.axis_index(axis_name), step % sched.shape[1]]
+        else:
+            s_t = sched[step % sched.shape[0]]
+        s_t = jnp.clip(s_t, 0, self.tau)
+        cap = self._cap()
+        slot = step % cap
+        buf = _tree_map2(
+            lambda b, f: lax.dynamic_update_index_in_dim(b, f, slot, 0),
+            state["buffer"], fresh)
+        read = (step - s_t) % cap
+        # a not-yet-produced gradient (t - s_t < 0) is the idle-start zero
+        stale = jax.tree_util.tree_map(
+            lambda b: jnp.where(
+                step >= s_t,
+                lax.dynamic_index_in_dim(b, read, 0, keepdims=False),
+                jnp.zeros(b.shape[1:], b.dtype)),
+            buf)
+        return stale, {"inner": inner_state, "buffer": buf,
+                       "head": step + 1}
 
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
         return self.inner.message_bytes(tree, n_workers=n_workers)
@@ -342,17 +406,67 @@ class GossipMix:
     ``topology='full'`` is W1 = 11^T/N (reduces DSGD to mb-SGD, Thm 5.2.6
     consistency check). TPU note: ppermute on a ring maps directly onto ICI
     neighbor links; this is the decentralized pattern's native home.
+
+    Beyond the two built-ins, ANY ``mixing.py`` matrix runs as collectives:
+    ``topology='torus'`` folds the worker axis onto ``mixing.torus_2d``
+    (near-square rows x cols), and ``w=<matrix>`` takes an explicit doubly
+    stochastic W. Both are lowered via ``mixing.birkhoff_decomposition``:
+    W = sum_k c_k P_k, executed as one ``lax.ppermute`` per non-identity
+    permutation P_k, scaled by the scalar c_k — deg(W) is therefore exactly
+    the number of wire messages each worker sends per mix (§5.1's cost).
     """
 
     topology: str = "ring"
     name: str = "gossip"
+    w: Any = None        # explicit doubly stochastic matrix (overrides
+                         # topology); stored as nested tuple, see __post_init__
+
+    def __post_init__(self):
+        if self.w is not None:
+            import numpy as np
+            w = np.asarray(self.w, dtype=float)
+            # nested tuple: keeps the frozen dataclass hashable/comparable
+            object.__setattr__(self, "w",
+                               tuple(tuple(row) for row in w.tolist()))
+
+    def _matrix(self, n: int):
+        """The explicit W to lower for this axis size, or None for the
+        ring/full ppermute fast paths."""
+        import numpy as np
+
+        from repro.core import mixing
+        if self.w is not None:
+            w = np.asarray(self.w)
+            if w.shape != (n, n):
+                raise ValueError(f"W is {w.shape}, axis has {n} workers")
+            return w
+        if self.topology == "torus":
+            return mixing.torus_2d(*mixing.near_square_factors(n))
+        if self.topology in ("ring", "full"):
+            return None
+        raise ValueError(f"unknown topology {self.topology}")
 
     def __call__(self, params: PyTree, *, axis_name: str) -> PyTree:
+        from repro.core import mixing
+
         n = _axis_size(axis_name)
+        w = self._matrix(n)
+        if w is not None:
+            if n == 1:
+                return params
+            terms = mixing.birkhoff_decomposition(w)
+
+            def mix(x):
+                acc = jnp.zeros_like(x)
+                for c, perm in terms:
+                    acc = acc + c * (x if not perm
+                                     else lax.ppermute(x, axis_name,
+                                                       list(perm)))
+                return acc
+
+            return jax.tree_util.tree_map(mix, params)
         if self.topology == "full":
             return lax.pmean(params, axis_name)
-        if self.topology != "ring":
-            raise ValueError(f"unknown topology {self.topology}")
         right = [(i, (i + 1) % n) for i in range(n)]
         left = [(i, (i - 1) % n) for i in range(n)]
 
@@ -368,11 +482,17 @@ class GossipMix:
         return jax.tree_util.tree_map(mix, params)
 
     def message_bytes(self, tree, *, n_workers: int = 3) -> float:
-        """Full fp32 model to each neighbor: 2 sends on the ring (both
-        directions), n-1 under the fully-connected W1."""
-        degree = 2 if self.topology == "ring" else max(n_workers - 1, 1)
-        if self.topology == "ring" and n_workers == 2:
-            degree = 1   # both neighbors are the same worker
+        """Full fp32 model to each neighbor: deg(W) sends per mix — 2 on
+        the ring (both directions), 4 on the torus, n-1 under W1."""
+        from repro.core import mixing
+
+        w = self._matrix(n_workers)
+        if w is not None:
+            degree = mixing.degree(w)
+        else:
+            degree = 2 if self.topology == "ring" else max(n_workers - 1, 1)
+            if self.topology == "ring" and n_workers == 2:
+                degree = 1   # both neighbors are the same worker
         return degree * _fp32_bytes(tree)
 
 

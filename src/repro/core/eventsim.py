@@ -76,13 +76,52 @@ class Delivery:
 
 
 @dataclasses.dataclass(frozen=True)
+class MsgRecord:
+    """ONE wire message (a Delivery is n_messages of these, back to back).
+
+    Message ``index`` of a split transfer occupies
+    ``[t_start, t_start + t_lat + (size_total/n_messages) * t_tr]`` on the
+    port pair — the per-message ledger that external schedulers (the
+    ``repro.cluster`` event loop) cross-check their timings against.
+    """
+
+    t_start: float
+    t_end: float
+    src: int
+    dst: int
+    size: float           # this message's share of the transfer
+    tag: str = ""
+    index: int = 0        # position within the split transfer
+    n_messages: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class SimResult:
     deliveries: tuple
     makespan: float           # last completion - 0
     span: float               # last completion - first request
+    messages: tuple = ()      # MsgRecord per wire message (per-message view
+                              # of `deliveries`; same total occupancy)
 
     def end_of(self, tag: str) -> float:
         return max(d.t_end for d in self.deliveries if d.tag == tag)
+
+    @property
+    def n_wire_messages(self) -> int:
+        return len(self.messages)
+
+
+def split_msg_records(t0: float, src: int, dst: int, size: float, tag: str,
+                      n_messages: int, *, t_lat: float,
+                      t_tr: float) -> list[MsgRecord]:
+    """The per-wire view of one transfer occupying [t0, ...]: k messages
+    back to back, each paying t_lat + its share of the transfer time.
+    Single source of the MsgRecord contract — used by simulate() and by
+    external schedulers (repro.cluster) so the ledgers stay comparable."""
+    k = max(n_messages, 1)
+    per = t_lat + (size / k) * t_tr
+    return [MsgRecord(t0 + i * per, t0 + (i + 1) * per, src, dst, size / k,
+                      tag, i, k) for i in range(k)]
 
 
 def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
@@ -101,6 +140,7 @@ def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
     send_free = [0.0] * n
     recv_free = [0.0] * n
     deliveries: list[Delivery] = []
+    records: list[MsgRecord] = []
     # Greedy event loop: repeatedly pick the eligible message that can start
     # earliest (then FIFO). O(k^2) is fine for the sizes we simulate.
     remaining = sorted((m.t_req, i, m) for i, m in enumerate(msgs))
@@ -124,9 +164,12 @@ def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
         send_free[m.src] = t_end
         recv_free[m.dst] = t_end
         deliveries.append(Delivery(t0, t_end, m.src, m.dst, m.size, m.tag))
+        records += split_msg_records(t0, m.src, m.dst, m.size, m.tag,
+                                     m.n_messages, t_lat=t_lat, t_tr=t_tr)
     makespan = max(d.t_end for d in deliveries) if deliveries else 0.0
     t_first = min(m.t_req for m in msgs) if msgs else 0.0
-    return SimResult(tuple(deliveries), makespan, makespan - t_first)
+    return SimResult(tuple(deliveries), makespan, makespan - t_first,
+                     tuple(records))
 
 
 # ---------------------------------------------------------------------------
@@ -229,16 +272,23 @@ def multi_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
 
 
 def decentralized_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
-                           degree: int = 2, compression: float = 1.0,
+                           degree: int = 2, w=None,
+                           compression: float = 1.0,
                            codec: Optional[str] = None,
                            n_messages: int = 1) -> float:
     """§5.1: each worker exchanges its FULL model with `degree` neighbors.
 
     Sends serialize at each worker's send port ->
     degree * (n_messages t_lat + size t_tr), = 2 t_lat + 2 t_tr for the
-    ring with one fused message (paper's closed form).
+    ring with one fused message (paper's closed form). Pass a gossip
+    matrix ``w`` (any ``mixing.py`` matrix, e.g. ``torus_2d``) to charge
+    its actual ``mixing.degree(W)`` instead of the ring's 2 — the torus
+    pays 4 sends, W1 pays n-1.
     """
     del n
+    if w is not None:
+        from repro.core import mixing   # lazy: keep eventsim numpy-free
+        degree = mixing.degree(w)
     return degree * (n_messages * t_lat
                      + _msg_mb(size, compression, codec) * t_tr)
 

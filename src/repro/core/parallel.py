@@ -180,9 +180,16 @@ class Quadratic:
 def run_quadratic(method: str, *, n_workers: int = 8, steps: int = 300,
                   lr: float = 0.1, batch: int = 4, seed: int = 0,
                   heterogeneity: float = 0.0, exchange_kw: dict | None = None,
-                  gossip_topology: str | None = None) -> RunResult:
+                  gossip_topology: str | None = None,
+                  gossip_w=None) -> RunResult:
     """One-call driver used by tests/benchmarks: method in
-    {gd, sgd, mbsgd, csgd_ps, csgd_ring, ecsgd, asgd, dsgd}."""
+    {gd, sgd, mbsgd, csgd_ps, csgd_ring, ecsgd, asgd, dsgd}.
+
+    dsgd accepts ``gossip_topology`` in {'ring', 'torus', 'full'} or an
+    explicit doubly stochastic ``gossip_w`` matrix (any ``mixing.py``
+    matrix — lowered to ppermutes via the Birkhoff decomposition);
+    ``asgd`` accepts ``exchange_kw={'schedule': ...}`` to replay a
+    measured per-step staleness table from the cluster scheduler."""
     from repro.core import communicators as C
 
     key = jax.random.PRNGKey(seed)
@@ -225,7 +232,7 @@ def run_quadratic(method: str, *, n_workers: int = 8, steps: int = 300,
                 return grad, state
 
         exchange = _Local()
-        gossip = GossipMix(topology=gossip_topology or "ring")
+        gossip = GossipMix(topology=gossip_topology or "ring", w=gossip_w)
         sampler = prob.make_sampler(batch, worker_partition=True,
                                     n_workers=n_workers)
     else:

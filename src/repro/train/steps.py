@@ -86,22 +86,37 @@ def abstract_train_state(cfg: ModelConfig, optimizer: Optimizer, *,
         jax.random.PRNGKey(0))
 
 
+def make_loss_fn(cfg: ModelConfig,
+                 step_cfg: TrainStepConfig = TrainStepConfig()):
+    """The production loss closure, ``loss(params, batch) -> scalar``.
+
+    Factored out of ``make_train_step`` so other drivers — notably the
+    virtual-cluster replay (``repro.cluster.execute``), which applies
+    gradients in trace order rather than through one jit'd step — run the
+    exact same forward/remat/flash configuration as production training.
+    """
+    impl = _impl(step_cfg.scan_layers)
+
+    def loss(params, batch):
+        kw = {}
+        if step_cfg.scan_layers:
+            kw["remat_policy"] = step_cfg.remat_policy
+        return impl.loss_fn(params, cfg, batch,
+                            use_flash=step_cfg.use_flash,
+                            remat=step_cfg.remat, **kw)
+
+    return loss
+
+
 def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
                     step_cfg: TrainStepConfig = TrainStepConfig()):
     q_codec = compression.codec(step_cfg.grad_compression)
 
-    impl = _impl(step_cfg.scan_layers)
+    loss_fn = make_loss_fn(cfg, step_cfg)
 
     def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
-        def loss(params):
-            kw = {}
-            if step_cfg.scan_layers:
-                kw["remat_policy"] = step_cfg.remat_policy
-            return impl.loss_fn(params, cfg, batch,
-                                use_flash=step_cfg.use_flash,
-                                remat=step_cfg.remat, **kw)
-
-        loss_val, grads = jax.value_and_grad(loss)(state["params"])
+        loss_val, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch))(state["params"])
         if step_cfg.grad_clip > 0:
             grads, grad_norm = clip_by_global_norm(grads, step_cfg.grad_clip)
         else:

@@ -1,0 +1,238 @@
+"""Virtual cluster engine: scheduler/eventsim cross-checks, trace
+invariants, and the async-beats-sync acceptance run (Chapter 4's claims
+on real training, not closed forms)."""
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.cluster import scheduler
+from repro.core import eventsim, mixing
+
+
+LAT, TR = 1.5, 5.0
+
+
+def _spec(**kw):
+    base = dict(n_workers=8, t_compute=1.0,
+                multipliers=cluster.straggler_multipliers(8, factor=4.0),
+                t_lat=1e-2, t_tr=2e-3, size_mb=1.0, codec="rq4")
+    base.update(kw)
+    return cluster.ClusterSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# scheduler <-> eventsim cross-checks
+# ---------------------------------------------------------------------------
+
+
+def test_sync_makespan_matches_eventsim_single_ps():
+    """ACCEPTANCE: with zero compute the scheduler's sync-PS round IS the
+    eventsim single-PS pattern — same simulate() calls, equal to 1e-9."""
+    for n in (2, 4, 8):
+        spec = cluster.ClusterSpec(n_workers=n, t_compute=0.0, t_lat=LAT,
+                                   t_tr=TR, size_mb=1.0)
+        tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=1)
+        ref = eventsim.single_ps_makespan(n, 1.0, t_lat=LAT, t_tr=TR)
+        assert abs(tr.makespan - ref) < 1e-9
+
+
+def test_async_scheduler_generalizes_eventsim_timeline():
+    """With deterministic multipliers and zero jitter the event loop
+    reproduces eventsim.async_ps_timeline event for event."""
+    spec = cluster.ClusterSpec(n_workers=3, t_compute=1.0,
+                               multipliers=(1.0, 1.0, 10.0),
+                               t_lat=0.1, t_tr=0.2, size_mb=1.0)
+    tr = cluster.make_protocol("async_ps").schedule(spec, horizon=60.0)
+    ref = eventsim.async_ps_timeline(3, t_compute=[1.0, 1.0, 10.0],
+                                     t_lat=0.1, t_tr=0.2, size=1.0,
+                                     horizon=60.0)
+    # the scheduler also clips on APPLY time (makespan <= horizon always);
+    # the timeline helper clips on request time only
+    ref = [u for u in ref if u[1] <= 60.0]
+    assert tr.makespan <= 60.0
+    got = [(e.worker, e.t_wall, e.staleness) for e in tr.updates()]
+    assert len(got) == len(ref)
+    for (w, t, s), (rw, rt, rs) in zip(got, ref):
+        assert w == rw and s == rs
+        assert t == pytest.approx(rt, abs=1e-12)
+
+
+def test_trace_comm_ledger_consistent_with_deliveries():
+    """Per-message records partition each delivery: k messages back to
+    back, same span, sizes summing to the transfer."""
+    spec = _spec(n_messages=3)
+    tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=2)
+    assert len(tr.messages) == 3 * len(tr.comm)
+    by_tag = {}
+    for r in tr.messages:
+        by_tag.setdefault((r.tag, r.src, r.dst), []).append(r)
+    for d in tr.comm:
+        recs = sorted(by_tag[(d.tag, d.src, d.dst)],
+                      key=lambda r: r.t_start)
+        assert recs[0].t_start == pytest.approx(d.t_start)
+        assert recs[-1].t_end == pytest.approx(d.t_end)
+        assert sum(r.size for r in recs) == pytest.approx(d.size)
+
+
+# ---------------------------------------------------------------------------
+# trace invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("proto,kw,skw", [
+    ("sync_ps", {}, {"rounds": 4}),
+    ("async_ps", {}, {"horizon": 30.0}),
+    ("local_sgd", {"period_h": 4}, {"rounds": 3}),
+    ("dsgd", {"topology": "torus"}, {"rounds": 4}),
+    ("laq", {"skip": 2}, {"rounds": 6}),
+])
+def test_trace_sorted_and_versions_consistent(proto, kw, skw):
+    tr = cluster.make_protocol(proto, **kw).schedule(_spec(), **skw)
+    ts = [e.t_wall for e in tr.events]
+    assert ts == sorted(ts)
+    for e in tr.updates():
+        assert e.staleness == e.version_applied - e.version_pulled >= 0
+    assert tr.makespan >= ts[-1] - 1e-12
+
+
+def test_async_staleness_grows_with_straggler_spread():
+    uniform = cluster.make_protocol("async_ps").schedule(
+        _spec(multipliers=()), horizon=60.0)
+    straggled = cluster.make_protocol("async_ps").schedule(
+        _spec(), horizon=60.0)
+    assert uniform.max_staleness == 7          # n-1 at equal speeds
+    assert straggled.max_staleness > uniform.max_staleness
+    assert straggled.max_staleness <= 4 * 8    # factor * n bound
+
+
+def test_jitter_is_seeded_and_order_independent():
+    s1 = _spec(jitter=0.3, seed=5)
+    s2 = _spec(jitter=0.3, seed=5)
+    assert s1.compute_time(3, 11) == s2.compute_time(3, 11)
+    assert s1.compute_time(3, 11) != s1.compute_time(3, 12)
+    tr1 = cluster.make_protocol("sync_ps").schedule(s1, rounds=3)
+    tr2 = cluster.make_protocol("sync_ps").schedule(s2, rounds=3)
+    assert tr1.makespan == tr2.makespan
+
+
+def test_laq_thins_the_uplink():
+    """LAQ's whole point: ~n/skip uplink messages per round."""
+    sync_tr = cluster.make_protocol("sync_ps").schedule(_spec(), rounds=6)
+    laq_tr = cluster.make_protocol("laq", skip=2).schedule(_spec(), rounds=6)
+    up = lambda t: [d for d in t.comm if d.tag.startswith("agg")]
+    assert len(up(laq_tr)) == len(up(sync_tr)) // 2
+    assert laq_tr.makespan < sync_tr.makespan
+    assert laq_tr.max_staleness == 2   # a gradient serves `skip` rounds
+
+
+def test_protocol_registry_mirrors_exchanges():
+    assert set(cluster.PROTOCOLS) == {"sync_ps", "async_ps", "local_sgd",
+                                      "dsgd", "laq"}
+    with pytest.raises(KeyError):
+        cluster.make_protocol("nope")
+    # protocol objects are frozen dataclasses with a name, like EXCHANGES
+    for name, cls in cluster.PROTOCOLS.items():
+        assert cls().name == name
+
+
+def test_dsgd_trace_costs_topology_degree():
+    """The scheduler charges deg(W) sends per worker per round, matching
+    eventsim.decentralized_makespan's accounting."""
+    ring_tr = cluster.make_protocol("dsgd", topology="ring").schedule(
+        _spec(), rounds=1)
+    torus_tr = cluster.make_protocol("dsgd", topology="torus").schedule(
+        _spec(), rounds=1)
+    per_worker = lambda t: len(t.comm) / t.n_workers
+    assert per_worker(ring_tr) == 2
+    assert per_worker(torus_tr) == mixing.degree(
+        mixing.torus_2d(*mixing.near_square_factors(8)))
+    # the trace carries the very matrix it was costed with
+    np.testing.assert_allclose(
+        np.asarray(torus_tr.extra("w")),
+        mixing.torus_2d(*mixing.near_square_factors(8)))
+
+
+# ---------------------------------------------------------------------------
+# replay: real training follows the trace
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_async_beats_sync_at_equal_wallclock():
+    """ACCEPTANCE: async PS, 8 vmapped workers, one 4x straggler, fused
+    rq4 codec — at sync-PS's simulated wall-clock the async run applies
+    STRICTLY more updates and lands within 2x of sync's loss."""
+    spec = _spec()
+    wl = cluster.quadratic_workload(n_workers=8)
+    sync_tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=20)
+    async_tr = cluster.make_protocol("async_ps").schedule(
+        spec, horizon=sync_tr.makespan)
+    # equal simulated wall-clock by construction
+    assert async_tr.makespan <= sync_tr.makespan
+    sync_res = cluster.replay(sync_tr, wl, codec="rq4", lr=0.1,
+                              eval_every=5)
+    async_res = cluster.replay(async_tr, wl, codec="rq4", lr=0.1,
+                               eval_every=25)
+    assert async_res.updates_applied > sync_res.updates_applied
+    assert async_res.final_loss <= 2.0 * sync_res.final_loss
+    # the trace's measured staleness actually occurred (it's an async run)
+    assert async_res.max_staleness >= 1
+
+
+def test_sync_replay_matches_parallel_mbsgd_convergence():
+    """Sync replay is plain mb-SGD: loss decreases monotonically-ish and
+    approaches the quadratic's floor."""
+    spec = _spec()
+    wl = cluster.quadratic_workload(n_workers=8)
+    tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=30)
+    res = cluster.replay(tr, wl, codec="none", lr=0.2, eval_every=10)
+    first, last = res.losses[0], res.losses[-1]
+    assert last < first
+    assert res.updates_applied == 30 * 8
+
+
+def test_local_sgd_and_dsgd_replays_converge():
+    spec = _spec()
+    wl = cluster.quadratic_workload(n_workers=8)
+    start = float(wl.eval_loss(wl.params0))
+    for proto, kw, skw in [("local_sgd", {"period_h": 4}, {"rounds": 10}),
+                           ("dsgd", {"topology": "torus"}, {"rounds": 40})]:
+        tr = cluster.make_protocol(proto, **kw).schedule(spec, **skw)
+        # dsgd traces carry their own W; replay uses it by default
+        res = cluster.replay(tr, wl, codec="rq4", lr=0.2, eval_every=5)
+        assert res.final_loss < 0.7 * start, proto
+
+
+def test_laq_replay_reuses_stale_gradients_and_converges():
+    spec = _spec()
+    wl = cluster.quadratic_workload(n_workers=8)
+    tr = cluster.make_protocol("laq", skip=2).schedule(spec, rounds=20)
+    res = cluster.replay(tr, wl, codec="rq4", lr=0.1, eval_every=5)
+    assert res.final_loss < float(wl.eval_loss(wl.params0))
+    # half the uplink of sync at the same round count
+    sync_tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=20)
+    assert res.n_wire_messages < len(sync_tr.messages)
+
+
+def test_staleness_schedule_bridges_to_delayed_exchange():
+    """A measured async trace replays through the algorithm tier: the
+    per-worker schedule is bounded by tau and drives DelayedExchange."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import communicators as C
+
+    tr = cluster.make_protocol("async_ps").schedule(_spec(), horizon=40.0)
+    sched = cluster.staleness_schedule(tr, tau=4)
+    assert sched.shape[0] == 8
+    assert sched.max() <= 4 and sched.min() >= 0
+
+    ex = C.DelayedExchange(inner=C.MbSGDExchange(), tau=4, schedule=sched)
+    state = jax.vmap(ex.init)(jnp.zeros((8, 4)))
+    g = jnp.ones((8, 4))
+    out, state = jax.vmap(
+        lambda gi, si: ex(gi, si, jax.random.PRNGKey(0), axis_name="workers"),
+        axis_name="workers")(g, state)
+    # step 0: workers whose first measured staleness is 0 see the fresh
+    # mean, the rest see the idle-start zeros
+    fresh = np.asarray(sched[:, 0] == 0, dtype=float)
+    np.testing.assert_allclose(np.asarray(out)[:, 0], fresh)

@@ -124,3 +124,102 @@ def test_csgd_ring_reduces_to_mean_without_noise():
     out, _ = _vrun(ex, g, jax.vmap(ex.init)(g), jax.random.PRNGKey(1))
     np.testing.assert_allclose(out, jnp.broadcast_to(g.mean(0), (n, 16)),
                                rtol=1e-5)
+
+
+def test_gossip_torus_equals_torus_matrix():
+    """GossipMix(topology='torus') == X @ torus_2d(near-square factors):
+    the Birkhoff lowering to ppermutes is exact."""
+    n, d = 8, 5
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    mixed = jax.vmap(lambda xi: C.GossipMix("torus")(xi, axis_name=AXIS),
+                     axis_name=AXIS)(x)
+    w = mixing.torus_2d(*mixing.near_square_factors(n))
+    np.testing.assert_allclose(mixed, jnp.asarray(w) @ x, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_gossip_explicit_matrix_equals_matmul():
+    """Any doubly stochastic mixing.py matrix runs as collectives."""
+    n, d = 6, 3
+    for w in (mixing.ring(n), mixing.fully_connected(n)):
+        gm = C.GossipMix(w=w)
+        x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+        mixed = jax.vmap(lambda xi: gm(xi, axis_name=AXIS),
+                         axis_name=AXIS)(x)
+        np.testing.assert_allclose(mixed, jnp.asarray(w) @ x, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_gossip_message_bytes_uses_matrix_degree():
+    tree = jnp.zeros((10,))
+    fp32 = 40.0
+    assert C.GossipMix("torus").message_bytes(tree, n_workers=16) == 4 * fp32
+    assert C.GossipMix("ring").message_bytes(tree, n_workers=16) == 2 * fp32
+    assert C.GossipMix(w=mixing.fully_connected(4)).message_bytes(
+        tree, n_workers=4) == 3 * fp32
+
+
+def test_gossip_registry_accepts_torus():
+    gm = C.make_exchange("gossip", topology="torus")
+    assert gm.topology == "torus"
+
+
+def test_delayed_exchange_schedule_replays_measured_staleness():
+    """Trace-driven staleness: output at step t is the input mean from
+    step t - s_t (zeros before the cluster produced one), s_t clipped to
+    tau — Assumption 5 with D(t) measured instead of worst-case."""
+    n, d, tau = 2, 8, 3
+    sched = [0, 2, 1, 3, 0, 2, 9]   # 9 -> clipped to tau=3
+    ex = C.DelayedExchange(inner=C.MbSGDExchange(), tau=tau, schedule=sched)
+    state = jax.vmap(ex.init)(jnp.zeros((n, d)))
+    outs, means = [], []
+    for t in range(7):
+        g = jnp.stack([jnp.full((d,), float(t * 10 + i)) for i in range(n)])
+        means.append(g.mean(0))
+        out, state = _vrun(ex, g, state, jax.random.PRNGKey(t))
+        outs.append(out[0])
+    for t in range(7):
+        s = min(sched[t], tau)
+        expect = jnp.zeros((d,)) if t < s else means[t - s]
+        np.testing.assert_allclose(outs[t], expect, rtol=1e-6, err_msg=str(t))
+
+
+def test_delayed_exchange_schedule_per_worker_rows():
+    """A 2-D schedule gives each worker its own measured delay sequence."""
+    n, d = 2, 4
+    ex = C.DelayedExchange(inner=C.MbSGDExchange(), tau=2,
+                           schedule=[[0, 1], [2, 0]])
+    state = jax.vmap(ex.init)(jnp.zeros((n, d)))
+    g0 = jnp.ones((n, d))
+    out0, state = _vrun(ex, g0, state, jax.random.PRNGKey(0))
+    # worker 0: s=0 -> fresh mean (1); worker 1: s=2 -> idle-start zeros
+    np.testing.assert_allclose(out0[0], jnp.ones((d,)), rtol=1e-6)
+    np.testing.assert_allclose(out0[1], jnp.zeros((d,)))
+    g1 = 3.0 * jnp.ones((n, d))
+    out1, state = _vrun(ex, g1, state, jax.random.PRNGKey(1))
+    # worker 0: s=1 -> step-0 mean (1); worker 1: s=0 -> fresh mean (3)
+    np.testing.assert_allclose(out1[0], jnp.ones((d,)), rtol=1e-6)
+    np.testing.assert_allclose(out1[1], 3.0 * jnp.ones((d,)), rtol=1e-6)
+
+
+def test_delayed_exchange_zero_schedule_is_inner_exchange():
+    """s_t = 0 everywhere degenerates to the wrapped exchange exactly."""
+    n, d = 3, 6
+    g = jax.random.normal(jax.random.PRNGKey(5), (n, d))
+    ex = C.DelayedExchange(inner=C.MbSGDExchange(), tau=4,
+                           schedule=[0, 0, 0])
+    state = jax.vmap(ex.init)(jnp.zeros((n, d)))
+    out, _ = _vrun(ex, g, state, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(out, jnp.broadcast_to(g.mean(0), (n, d)),
+                               rtol=1e-6)
+
+
+def test_delayed_exchange_schedule_rejects_wrong_row_count():
+    import pytest
+
+    ex = C.DelayedExchange(inner=C.MbSGDExchange(), tau=2,
+                           schedule=[[0, 1], [1, 0]])   # 2 rows
+    n = 4                                               # but 4 workers
+    state = jax.vmap(ex.init)(jnp.zeros((n, 3)))
+    with pytest.raises(ValueError):
+        _vrun(ex, jnp.ones((n, 3)), state, jax.random.PRNGKey(0))

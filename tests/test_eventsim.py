@@ -105,6 +105,85 @@ def test_async_no_global_barrier():
     assert max(s for _, _, s in updates) >= 1          # staleness occurs
 
 
+def test_async_staleness_bounded_linear_in_n():
+    """Figure 4.2 invariant: at equal worker speeds the async-PS staleness
+    is exactly n-1 (every other worker lands one update per cycle); a
+    k-times straggler stretches it to at most k*n."""
+    for n in (2, 4, 8, 16):
+        ups = eventsim.async_ps_timeline(
+            n, t_compute=[1.0] * n, t_lat=0.01, t_tr=0.002, size=1.0,
+            horizon=100.0)
+        assert max(s for *_, s in ups) == n - 1
+    for n in (4, 8):
+        ups = eventsim.async_ps_timeline(
+            n, t_compute=[1.0] * (n - 1) + [4.0], t_lat=0.01, t_tr=0.002,
+            size=1.0, horizon=100.0)
+        assert n - 1 < max(s for *_, s in ups) <= 4 * n
+
+
+def test_async_throughput_beats_sync_under_straggler():
+    """Figure 4.1 invariant: a barrier makes every round pay the
+    straggler; async keeps the fast workers pushing."""
+    n, horizon = 8, 200.0
+    t_compute = [1.0] * (n - 1) + [4.0]
+    sync = eventsim.sync_ps_throughput(n, t_compute_max=max(t_compute),
+                                       t_lat=0.01, t_tr=0.002, size=1.0)
+    ups = eventsim.async_ps_timeline(n, t_compute=t_compute, t_lat=0.01,
+                                     t_tr=0.002, size=1.0, horizon=horizon)
+    assert len(ups) / horizon >= sync
+    # without the straggler the gap narrows but async still >= sync
+    sync_u = eventsim.sync_ps_throughput(n, t_compute_max=1.0, t_lat=0.01,
+                                         t_tr=0.002, size=1.0)
+    ups_u = eventsim.async_ps_timeline(n, t_compute=[1.0] * n, t_lat=0.01,
+                                       t_tr=0.002, size=1.0, horizon=horizon)
+    assert len(ups_u) / horizon >= sync_u
+
+
+def test_async_timeline_sorted_by_apply_time():
+    ups = eventsim.async_ps_timeline(
+        6, t_compute=[1.0, 1.5, 1.0, 3.0, 1.0, 2.0], t_lat=0.02,
+        t_tr=0.005, size=1.0, horizon=80.0)
+    times = [t for _, t, _ in ups]
+    assert times == sorted(times)
+    assert all(s >= 0 for *_, s in ups)
+
+
+def test_per_message_records_partition_deliveries():
+    """SimResult.messages: an n_messages=k transfer is k back-to-back wire
+    messages, each paying t_lat + its share of the transfer time."""
+    res = eventsim.simulate([eventsim.Msg(0.0, 0, 1, 1.0, "x", 4),
+                             eventsim.Msg(0.0, 2, 3, 1.0, "y", 1)],
+                            t_lat=LAT, t_tr=TR)
+    assert res.n_wire_messages == 5
+    xs = sorted((r for r in res.messages if r.tag == "x"),
+                key=lambda r: r.index)
+    d = next(d for d in res.deliveries if d.tag == "x")
+    assert xs[0].t_start == pytest.approx(d.t_start)
+    assert xs[-1].t_end == pytest.approx(d.t_end)
+    for a, b in zip(xs, xs[1:]):
+        assert b.t_start == pytest.approx(a.t_end)
+    for r in xs:
+        assert r.t_end - r.t_start == pytest.approx(LAT + TR / 4)
+        assert r.n_messages == 4
+
+
+def test_decentralized_degree_from_mixing_matrix():
+    """Satellite: the decentralized cost takes deg(W) from any mixing.py
+    matrix instead of hardcoding the ring's 2."""
+    from repro.core import mixing
+
+    ring_t = eventsim.decentralized_makespan(16, 1.0, t_lat=LAT, t_tr=TR)
+    torus_t = eventsim.decentralized_makespan(16, 1.0, t_lat=LAT, t_tr=TR,
+                                              w=mixing.torus_2d(4, 4))
+    full_t = eventsim.decentralized_makespan(
+        16, 1.0, t_lat=LAT, t_tr=TR, w=mixing.fully_connected(16))
+    assert ring_t == pytest.approx(2 * (LAT + TR))
+    assert torus_t == pytest.approx(4 * (LAT + TR))
+    assert full_t == pytest.approx(15 * (LAT + TR))
+    assert eventsim.decentralized_makespan(
+        16, 1.0, t_lat=LAT, t_tr=TR, degree=4) == pytest.approx(torus_t)
+
+
 def test_table_1_1_comm_costs_match_eventsim():
     """Table 1.1 comm-cost column == simulator outputs."""
     n, a, b = 8, LAT, TR

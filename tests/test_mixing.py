@@ -66,3 +66,51 @@ def test_degree():
     assert mixing.degree(mixing.ring(8)) == 2
     assert mixing.degree(mixing.torus_2d(4, 4)) == 4
     assert mixing.degree(mixing.fully_connected(8)) == 7
+
+
+def _reconstruct(n, terms):
+    rec = np.zeros((n, n))
+    for c, perm in terms:
+        p = np.eye(n)
+        if perm:
+            p = np.zeros((n, n))
+            for src, dst in perm:
+                p[dst, src] = 1.0
+        rec += c * p
+    return rec
+
+
+@pytest.mark.parametrize("w", [mixing.ring(8), mixing.torus_2d(2, 4),
+                               mixing.torus_2d(3, 3),
+                               mixing.fully_connected(6)])
+def test_birkhoff_decomposition_reconstructs_w(w):
+    """W = sum_k c_k P_k exactly: the lowering GossipMix executes as one
+    ppermute per non-identity permutation."""
+    terms = mixing.birkhoff_decomposition(w)
+    n = w.shape[0]
+    np.testing.assert_allclose(_reconstruct(n, terms), w, atol=1e-9)
+    assert sum(c for c, _ in terms) == pytest.approx(1.0)
+    for c, perm in terms:
+        assert c > 0
+        if perm:   # full permutation of the axis (ppermute's contract)
+            assert sorted(s for s, _ in perm) == list(range(n))
+            assert sorted(d for _, d in perm) == list(range(n))
+
+
+def test_birkhoff_term_count_tracks_degree():
+    """Sparse W lowers to few collectives: ring = identity + 2 shifts,
+    torus = identity + 4 shifts; W1 needs one term per worker."""
+    assert len(mixing.birkhoff_decomposition(mixing.ring(8))) == 3
+    assert len(mixing.birkhoff_decomposition(mixing.torus_2d(3, 3))) == 5
+    assert len(mixing.birkhoff_decomposition(mixing.fully_connected(6))) == 6
+
+
+def test_birkhoff_rejects_non_doubly_stochastic():
+    with pytest.raises(ValueError):
+        mixing.birkhoff_decomposition(np.array([[0.5, 0.2], [0.5, 0.8]]))
+
+
+def test_near_square_factors():
+    assert mixing.near_square_factors(8) == (2, 4)
+    assert mixing.near_square_factors(16) == (4, 4)
+    assert mixing.near_square_factors(7) == (1, 7)   # prime -> 1-D torus
