@@ -1,0 +1,84 @@
+"""Bench-delta gate: diff fresh smoke benchmark numbers against the
+committed baseline and ANNOTATE (never fail) on regressions.
+
+CI runs ``kernels_bench.py --smoke --out <fresh>`` and then
+
+    python benchmarks/bench_delta.py --baseline BENCH_kernels_smoke.json \
+        --fresh <fresh> [--threshold 2.0]
+
+Ops present in both files are compared on their steady-state ``us``; any
+fresh/baseline ratio above the threshold prints a GitHub Actions
+``::warning::`` annotation (CI machines vary in speed, so this warns
+rather than fails — the point is that the next flat-path-style compute
+regression is VISIBLE at PR time instead of landing silently, the way
+PR 2's 2.3x tree_encode_flat regression did). Exit code is always 0;
+``--strict`` flips regressions to exit 1 for local use.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), os.pardir)
+DEFAULT_BASELINE = os.path.join(REPO, "BENCH_kernels_smoke.json")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["op"]: r for r in rows}
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> list:
+    """[(op, base_us, fresh_us, ratio)] for every op above threshold."""
+    regressions = []
+    for op, row in fresh.items():
+        if op not in baseline:
+            continue
+        base_us = float(baseline[op]["us"])
+        fresh_us = float(row["us"])
+        if base_us <= 0:
+            continue
+        ratio = fresh_us / base_us
+        if ratio > threshold:
+            regressions.append((op, base_us, fresh_us, ratio))
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="warn when fresh/baseline exceeds this ratio")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regressions (local use; CI warns only)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"::notice::bench_delta: no baseline at {args.baseline}; "
+              "skipping comparison")
+        return 0
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    shared = sorted(set(baseline) & set(fresh))
+    print(f"# bench_delta: {len(shared)} shared ops "
+          f"(threshold {args.threshold:.1f}x)")
+    for op in shared:
+        b, f = float(baseline[op]["us"]), float(fresh[op]["us"])
+        ratio = f / b if b > 0 else float("inf")
+        print(f"{op:32s} base={b:10.0f}us fresh={f:10.0f}us "
+              f"ratio={ratio:5.2f}x")
+    regressions = compare(baseline, fresh, args.threshold)
+    for op, b, f, ratio in regressions:
+        print(f"::warning::bench regression: {op} {ratio:.2f}x slower "
+              f"than baseline ({b:.0f}us -> {f:.0f}us)")
+    if not regressions:
+        print("# no regressions above threshold")
+    return 1 if (regressions and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

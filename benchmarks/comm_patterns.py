@@ -30,17 +30,23 @@ def sweep(size_mb: float = 100.0, *, smoke: bool = False):
                                                   t_tr=beta)
             ar_nopart = eventsim.ring_allreduce_makespan(
                 n, size_mb, t_lat=alpha, t_tr=beta, partitioned=False)
-            # rq8's measured packed wire format (~4x vs fp32, incl. header)
-            csgd = eventsim.ring_allreduce_makespan(
+            # rq8's measured packed wire format (~4x vs fp32, incl.
+            # header), as the partitioned compressed ring (2(n-1) hops of
+            # size/n — CSGDRingExchange's default) vs the monolithic
+            # chain ((n-1) full-size hops)
+            csgd = eventsim.csgd_ring_makespan(
                 n, size_mb, t_lat=alpha, t_tr=beta, codec="rq8")
+            csgd_mono = eventsim.csgd_ring_makespan(
+                n, size_mb, t_lat=alpha, t_tr=beta, codec="rq8",
+                partitioned=False)
             dec = eventsim.decentralized_makespan(n, size_mb, t_lat=alpha,
                                                   t_tr=beta)
             # beyond-ring topology: the torus pays deg(W)=4 sends
             dec_torus = eventsim.decentralized_makespan(
                 n, size_mb, t_lat=alpha, t_tr=beta,
                 w=mixing.torus_2d(*mixing.near_square_factors(n)))
-            rows.append((n, regime, ps, ar, ar_nopart, csgd, dec,
-                         dec_torus))
+            rows.append((n, regime, ps, ar, ar_nopart, csgd, csgd_mono,
+                         dec, dec_torus))
     return rows
 
 
@@ -58,18 +64,20 @@ def async_vs_sync(n: int = 8):
 
 def main(smoke: bool = False, out_path: str = OUT_PATH):
     print("# Communication patterns under the Section 1.3 switch model "
-          "(makespan, seconds)")
+          "(makespan, seconds; CSGD = partitioned compressed ring, "
+          "CSGD-mono = monolithic (n-1)-full-hop chain)")
     print(f"{'N':>4s} {'regime':>9s} {'PS':>10s} {'ringAR':>10s} "
-          f"{'AR-nopart':>10s} {'CSGD(4x)':>10s} {'DSGD':>10s} "
-          f"{'DSGD-torus':>10s}")
+          f"{'AR-nopart':>10s} {'CSGD(4x)':>10s} {'CSGD-mono':>10s} "
+          f"{'DSGD':>10s} {'DSGD-torus':>10s}")
     payload = []
-    for n, regime, ps, ar, nop, csgd, dec, dect in sweep(smoke=smoke):
+    for n, regime, ps, ar, nop, csgd, csgdm, dec, dect in sweep(smoke=smoke):
         print(f"{n:4d} {regime:>9s} {ps:10.3f} {ar:10.3f} {nop:10.3f} "
-              f"{csgd:10.3f} {dec:10.3f} {dect:10.3f}")
+              f"{csgd:10.3f} {csgdm:10.3f} {dec:10.3f} {dect:10.3f}")
         payload.append({"n": n, "regime": regime, "ps": round(ps, 4),
                         "ring_ar": round(ar, 4),
                         "ar_nopart": round(nop, 4),
                         "csgd_rq8": round(csgd, 4),
+                        "csgd_rq8_mono": round(csgdm, 4),
                         "dsgd_ring": round(dec, 4),
                         "dsgd_torus": round(dect, 4)})
     sync, asyn, stale = async_vs_sync()

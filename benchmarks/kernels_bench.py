@@ -3,15 +3,23 @@ the numbers that matter for the TPU target are the VMEM working sets and
 roofline estimates printed alongside).
 
 Emits machine-readable ``BENCH_kernels.json`` at the repo root —
-``[{"op": ..., "us": ..., "est": ...}, ...]`` — so every run extends the
-perf trajectory. ``--smoke`` shrinks every shape to CI scale (the job
-uploads the JSON as an artifact; the point is that the benchmark code
-itself cannot rot unnoticed).
+``[{"op": ..., "us": ..., "first_call_us": ..., "est": ...}, ...]`` — so
+every run extends the perf trajectory. ``us`` is STEADY STATE (post
+warm-up, best of k reps — what the hardware does once compiled);
+``first_call_us`` is the separate first-call time (compile + dispatch),
+reported apart so dispatch/interpret overhead cannot pollute the
+trajectory the way the 10 ms quant_qdq row once shadowed its 15 µs
+roofline estimate. ``--smoke`` shrinks every shape to CI scale, where
+``benchmarks/bench_delta.py`` diffs the numbers against the committed
+``BENCH_kernels_smoke.json`` baseline and annotates >2x regressions.
 
-The tree-encode pair is the fused-vs-per-leaf codec comparison on the
+The tree-encode rows compare the codec messaging tiers on the
 repro-100m gradient tree: per-leaf pays one dispatch + one (lo, scale)
 reduction + one padded message per pytree leaf; the fused flat-buffer
-tier pays them once for the whole tree.
+tier pays them once for the whole tree (its steady state must be no
+slower — ``flat_vs_perleaf_speedup`` >= 1 is the PR-2-regression
+acceptance bar); the partitioned row encodes the same buffer as the
+ring AllReduce's N per-partition messages.
 """
 from __future__ import annotations
 
@@ -33,15 +41,18 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 
 
 def _time(fn, *args, reps=3):
-    # block on the warm-up call: compilation AND its async dispatch must
-    # finish before the timer starts, or they bleed into the first rep
-    jax.block_until_ready(fn(*args))
+    """(first_call_us, steady_us): first call = compile + dispatch, timed
+    alone; steady state = best-of-reps after the warm-up, each rep
+    block_until_ready'd so async dispatch cannot smear across reps."""
     t0 = time.perf_counter()
-    out = None
+    jax.block_until_ready(fn(*args))
+    first = (time.perf_counter() - t0) * 1e6
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return first, best
 
 
 def _grad_tree(smoke: bool):
@@ -95,33 +106,51 @@ def main(smoke: bool = False, out_path: str = OUT_PATH):
     us = _time(lambda *a: wkv_ops.wkv6(*a)[0], r, kk, vv, lw, u)
     rows.append((f"wkv6_{t_wkv}", us, "chunked-scan"))
 
-    # fused flat-buffer vs per-leaf tree-encode on the repro-100m gradient
-    # tree (L dispatches + L params reductions + L padded messages vs 1)
+    # codec messaging tiers on the repro-100m gradient tree: per-leaf
+    # (L dispatches + L params reductions + L padded messages), fused
+    # flat buffer (one of each), and the ring's partitioned encode
+    # (n_workers per-partition messages over one backing buffer)
     grads = _grad_tree(smoke)
     n_leaves = len(jax.tree_util.tree_leaves(grads))
+    n_workers = 8
     cdc = compression.codec("rq8")
     us_leaf = _time(lambda t: cdc.tree_encode(t, key), grads)
     us_flat = _time(lambda t: cdc.tree_encode_flat(t, key), grads)
+    us_part = _time(lambda t: cdc.tree_encode_partitioned(t, key,
+                                                          n_workers),
+                    grads)
     b_leaf = cdc.tree_wire_bytes(grads)
     b_flat = cdc.tree_wire_bytes_flat(grads)
+    b_part = cdc.tree_wire_bytes_partitioned(grads, n_workers)
     tag = "reduced" if smoke else "100m"
+    speedup = us_leaf[1] / us_flat[1]
     rows.append((f"tree_encode_per_leaf_{tag}", us_leaf,
                  f"wire_B={b_leaf:.0f},n_messages={n_leaves}"))
     rows.append((f"tree_encode_flat_{tag}", us_flat,
                  f"wire_B={b_flat:.0f},n_messages=1"))
+    rows.append((f"tree_encode_partitioned_{tag}", us_part,
+                 f"part_wire_B={b_part:.0f},n_parts={n_workers}"))
 
-    print("# Kernel microbenchmarks (CPU interpret mode — correctness tier)")
-    print(f"{'name':28s} {'us_per_call':>12s}  derived")
-    for name, us, derived in rows:
-        print(f"{name:28s} {us:12.0f}  {derived}")
+    print("# Kernel microbenchmarks (CPU interpret mode — correctness "
+          "tier; us = steady state, first = compile + first dispatch)")
+    print(f"{'name':30s} {'us_steady':>10s} {'first_ms':>9s}  derived")
+    for name, (first, us), derived in rows:
+        print(f"{name:30s} {us:10.0f} {first / 1e3:9.0f}  {derived}")
+    print(f"# flat_vs_perleaf_speedup = {speedup:.2f}x (steady state; "
+          ">= 1 means the fused path is no slower than per-leaf)")
 
-    payload = [{"op": name, "us": round(us, 1), "est": derived}
-               for name, us, derived in rows]
+    payload = []
+    for name, (first, us), derived in rows:
+        row = {"op": name, "us": round(us, 1),
+               "first_call_us": round(first, 1), "est": derived}
+        if name.startswith("tree_encode_flat"):
+            row["flat_vs_perleaf_speedup"] = round(speedup, 3)
+        payload.append(row)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     print(f"# wrote {os.path.normpath(out_path)}")
-    return ",".join(f"{n}={u:.0f}us" for n, u, _ in rows)
+    return ",".join(f"{n}={u:.0f}us" for n, (_, u), _ in rows)
 
 
 if __name__ == "__main__":

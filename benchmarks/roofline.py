@@ -69,7 +69,11 @@ def compressed_collective_s(coll_bytes: float, codec_name: str, *,
     Per-message accounting: each wire message pays the fixed ICI_LAT, so
     the term is wire/ICI_BW + n_messages * ICI_LAT. The fused flat-buffer
     codec tier ships ONE message per sync (n_messages=1, the default);
-    per-leaf messaging would set n_messages to the gradient's leaf count.
+    per-leaf messaging would set n_messages to the gradient's leaf count,
+    and the partitioned ring AllReduce (CSGDRingExchange's default wire
+    pattern) sets n_messages = 2*(n_devices - 1) partition messages —
+    what `derive` charges, since the per-device reducible bytes already
+    reflect the bandwidth-optimal 2M(N-1)/N decomposition.
     """
     from repro.core import compression
 
@@ -121,9 +125,12 @@ def derive(rec: dict, *, grad_codec: Optional[str] = "rq8") -> dict:
         reducible = breakdown.get("all-reduce", 0.0) \
             + breakdown.get("reduce-scatter", 0.0)
         rest = max(coll_dev - reducible, 0.0)
-        # dryrun compiles the production programs in bf16 (2 B/element)
+        # dryrun compiles the production programs in bf16 (2 B/element);
+        # the compressed sync ships as a partitioned ring AllReduce:
+        # 2(n-1) partition messages per device, each paying ICI_LAT
         comp = compressed_collective_s(reducible, grad_codec,
-                                       elem_bytes=2.0) \
+                                       elem_bytes=2.0,
+                                       n_messages=2 * (n_dev - 1)) \
             if reducible > 0 else 0.0
         out["t_collective_compressed_s"] = rest / ICI_BW + comp
         out["grad_codec"] = grad_codec
@@ -148,9 +155,9 @@ def main():
         return "missing"
     print("# Roofline terms per (arch x shape), single-pod 16x16 "
           "(seconds/step; v5e constants; coll(rq8) = collective term under "
-          "the measured rq8 packed wire format, shipped as ONE fused "
-          "flat-buffer message — per-leaf messaging would add "
-          "(L-1)*ICI_LAT per sync)")
+          "the measured rq8 packed wire format, shipped as a partitioned "
+          "compressed ring AllReduce — 2(n-1) partition messages each "
+          "paying ICI_LAT; per-leaf messaging would pay L per hop instead)")
     print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
           f"{'collect':>10s} {'coll(rq8)':>10s} {'dominant':>10s} "
           f"{'useful':>7s}")

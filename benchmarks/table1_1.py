@@ -47,7 +47,9 @@ def run(n_workers: int = 8, eps: float = 5e-3, steps: int = 800,
     comm = {
         "mb-SGD": eventsim.ring_allreduce_makespan(
             n_workers, size_mb, t_lat=alpha, t_tr=beta),
-        "CSGD": eventsim.ring_allreduce_makespan(
+        # the partitioned compressed ring (CSGDRingExchange's default):
+        # 2(n-1) partition messages, 2M(n-1)/n wire bytes per worker
+        "CSGD": eventsim.csgd_ring_makespan(
             n_workers, size_mb, t_lat=alpha, t_tr=beta, codec="rq4"),
         "EC-SGD": eventsim.ring_allreduce_makespan(
             n_workers, size_mb, t_lat=alpha, t_tr=beta, codec="sign1"),
@@ -73,13 +75,21 @@ def run(n_workers: int = 8, eps: float = 5e-3, steps: int = 800,
 def fused_vs_per_leaf(arch: str = "repro-100m", n_workers: int = 8,
                       codec: str = "rq4", alpha: float = 1e-3,
                       beta: float = 1e-2):
-    """Fused flat-buffer vs per-leaf codec messaging on a real gradient
-    tree (the §1.3 per-message latency charge, measured end to end).
+    """Per-leaf vs fused-monolithic vs partitioned ring messaging on a
+    real gradient tree (§1.3's per-message latency charge AND §1.3.3's
+    partitioning argument, measured end to end).
 
-    A per-leaf codec path ships one message per pytree leaf — n_messages
-    = L per ring hop (latency ~ 2 N L t_lat); the fused tier ships ONE
-    FlatPacked (~ 2 N t_lat). Wire bytes come from the MEASURED codec
-    formats (eval_shape only — nothing is allocated).
+    Three tiers of CSGDRingExchange history:
+      per-leaf     N-1 hops, L messages each (latency ~ N L t_lat),
+                   full-tree bytes per hop;
+      fused mono   N-1 hops, ONE FlatPacked each (~ N t_lat), still
+                   full-tree bytes per hop -> (N-1)*M wire per worker;
+      partitioned  reduce-scatter + all-gather: 2(N-1) hops of ONE
+                   partition (M/N bytes) -> 2*M*(N-1)/N per worker, the
+                   bandwidth-optimal decomposition (the default).
+
+    Wire bytes come from the MEASURED codec formats (eval_shape only —
+    nothing is allocated).
     """
     import jax
 
@@ -94,18 +104,29 @@ def fused_vs_per_leaf(arch: str = "repro-100m", n_workers: int = 8,
     cdc = compression.codec(codec)
     per_leaf_b = cdc.tree_wire_bytes(grads)
     fused_b = cdc.tree_wire_bytes_flat(grads)
+    part_b = cdc.tree_wire_bytes_partitioned(grads, n_workers)
     size_mb = 4.0 * compression.FlatLayout.from_tree(grads).total / 1e6
-    t_per_leaf = eventsim.ring_allreduce_makespan(
+    t_per_leaf = eventsim.csgd_ring_makespan(
         n_workers, size_mb, t_lat=alpha, t_tr=beta, codec=codec,
-        n_messages=n_leaves)
-    t_fused = eventsim.ring_allreduce_makespan(
+        partitioned=False, n_messages=n_leaves)
+    t_mono = eventsim.csgd_ring_makespan(
         n_workers, size_mb, t_lat=alpha, t_tr=beta, codec=codec,
-        n_messages=1)
+        partitioned=False, n_messages=1)
+    t_part = eventsim.csgd_ring_makespan(
+        n_workers, size_mb, t_lat=alpha, t_tr=beta, codec=codec,
+        partitioned=True, n_messages=1)
     return {"arch": arch, "codec": codec, "n_leaves": n_leaves,
-            "size_mb": size_mb, "per_leaf_bytes": per_leaf_b,
-            "fused_bytes": fused_b, "per_leaf_makespan_s": t_per_leaf,
-            "fused_makespan_s": t_fused,
-            "latency_gap_s": t_per_leaf - t_fused}
+            "size_mb": size_mb,
+            "per_leaf_bytes": per_leaf_b,
+            "fused_bytes": fused_b,
+            "partitioned_part_bytes": part_b,
+            "partitioned_wire_bytes": 2 * (n_workers - 1) * part_b,
+            "mono_wire_bytes": (n_workers - 1) * fused_b,
+            "per_leaf_makespan_s": t_per_leaf,
+            "fused_makespan_s": t_mono,
+            "partitioned_makespan_s": t_part,
+            "n_wire_messages": 2 * (n_workers - 1),
+            "latency_gap_s": t_per_leaf - t_mono}
 
 
 def main():
@@ -118,20 +139,31 @@ def main():
         print(f"{name:10s} {ana:20.1f} {emp:16d} {comm:14.4f} {wire_b:12.0f}")
         derived.append(f"{name}:it={emp}")
     f = fused_vs_per_leaf()
-    print(f"\n# Fused flat-buffer vs per-leaf messaging "
-          f"({f['arch']} grads, {f['codec']}, ring n=8, "
+    n = 8
+    print(f"\n# CSGD ring messaging tiers "
+          f"({f['arch']} grads, {f['codec']}, ring n={n}, "
           f"L={f['n_leaves']} leaves, {f['size_mb']:.1f} fp32 MB)")
-    print(f"{'path':10s} {'n_messages/hop':>14s} {'wire_B/hop':>12s} "
-          f"{'ring_makespan(s)':>17s}")
-    print(f"{'per-leaf':10s} {f['n_leaves']:14d} "
-          f"{f['per_leaf_bytes']:12.0f} {f['per_leaf_makespan_s']:17.4f}")
-    print(f"{'fused':10s} {1:14d} {f['fused_bytes']:12.0f} "
-          f"{f['fused_makespan_s']:17.4f}")
-    print(f"# latency gap = {f['latency_gap_s']:.4f}s per exchange "
-          f"(2(n-1)(L-1)*t_lat), wire saving = "
-          f"{f['per_leaf_bytes'] - f['fused_bytes']:.0f} B "
-          f"(pad granules + params headers)")
+    print(f"{'path':12s} {'msgs/iter':>10s} {'wire_B/msg':>12s} "
+          f"{'wire_B/worker/iter':>19s} {'makespan(s)':>12s}")
+    print(f"{'per-leaf':12s} {(n - 1) * f['n_leaves']:10d} "
+          f"{f['per_leaf_bytes'] / f['n_leaves']:12.0f} "
+          f"{(n - 1) * f['per_leaf_bytes']:19.0f} "
+          f"{f['per_leaf_makespan_s']:12.4f}")
+    print(f"{'fused-mono':12s} {n - 1:10d} {f['fused_bytes']:12.0f} "
+          f"{f['mono_wire_bytes']:19.0f} {f['fused_makespan_s']:12.4f}")
+    print(f"{'partitioned':12s} {f['n_wire_messages']:10d} "
+          f"{f['partitioned_part_bytes']:12.0f} "
+          f"{f['partitioned_wire_bytes']:19.0f} "
+          f"{f['partitioned_makespan_s']:12.4f}")
+    print(f"# per-message latency gap (per-leaf vs fused) = "
+          f"{f['latency_gap_s']:.4f}s per exchange ((n-1)(L-1)*t_lat); "
+          f"partitioned wire = 2M(n-1)/n = "
+          f"{f['partitioned_wire_bytes'] / f['mono_wire_bytes']:.3f}x "
+          f"the monolithic (n-1)M")
     derived.append(f"fused_gap_s={f['latency_gap_s']:.3f}")
+    derived.append(
+        f"part_vs_mono_bytes="
+        f"{f['partitioned_wire_bytes'] / f['mono_wire_bytes']:.3f}")
     return ",".join(derived)
 
 

@@ -32,7 +32,13 @@ from repro.cluster.scheduler import ClusterSpec, Trace
 
 @dataclasses.dataclass(frozen=True)
 class SyncPS:
-    """Synchronous parameter server (§1.3.2): the barrier baseline."""
+    """Synchronous parameter server (§1.3.2): the barrier baseline.
+
+    ``ClusterSpec(allreduce="ring")`` swaps the PS uplink+broadcast for
+    the partitioned ring AllReduce (2(N-1) rounds of size/N partition
+    messages — the same wire pattern and 2M(N-1)/N per-worker bytes as
+    ``CSGDRingExchange``); the protocol semantics (barrier, staleness 0)
+    are unchanged, only the comm costing differs."""
 
     name: str = "sync_ps"
 
@@ -61,7 +67,9 @@ class AsyncPS:
 
 @dataclasses.dataclass(frozen=True)
 class LocalSGD:
-    """Local SGD with period H: H local steps between averaging rounds."""
+    """Local SGD with period H: H local steps between averaging rounds
+    (averaging costed as PS or, with ``ClusterSpec(allreduce="ring")``,
+    as the partitioned ring AllReduce)."""
 
     period_h: int = 8
     name: str = "local_sgd"

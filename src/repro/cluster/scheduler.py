@@ -82,7 +82,17 @@ class ClusterSpec:
     size_mb: float = 1.0
     codec: Optional[str] = None    # measured wire size instead of size_mb
     n_messages: int = 1            # wire messages per logical transfer
+    allreduce: str = "ps"          # "ps" | "ring" — how sync/local-SGD
+                                   # averaging rounds are costed: PS
+                                   # uplink+broadcast, or the partitioned
+                                   # ring (2(N-1) rounds of size/N chunks,
+                                   # matching CSGDRingExchange)
     seed: int = 0
+
+    def __post_init__(self):
+        if self.allreduce not in ("ps", "ring"):
+            raise ValueError(f"unknown allreduce '{self.allreduce}'; "
+                             "have 'ps', 'ring'")
 
     def multiplier(self, worker: int) -> float:
         if not self.multipliers:
@@ -99,11 +109,19 @@ class ClusterSpec:
         return base
 
     def msg_mb(self) -> float:
-        """Wire MB of one gradient/model message (codec-measured if set)."""
-        if self.codec is not None:
-            n_el = max(1, int(self.size_mb * 1e6 / 4.0))
-            return eventsim.wire_size_mb(self.codec, n_el)
-        return self.size_mb
+        """Wire MB of one gradient/model message (codec-measured if set).
+
+        Delegates to eventsim's chunk sizing so scheduler and eventsim
+        makespans stay bit-identical (the 1e-9 cross-check)."""
+        return eventsim._msg_mb(self.size_mb, 1.0, self.codec)
+
+    def partition_msg_mb(self) -> float:
+        """Wire MB of ONE ring partition message (1/n_workers of the
+        buffer, codec-measured if set) — the chunk each of the 2(N-1)
+        partitioned-AllReduce rounds moves per worker. Same sizing as
+        ``eventsim.csgd_ring_makespan``'s, by construction."""
+        return eventsim._msg_mb(self.size_mb, 1.0, self.codec,
+                                n_chunks=self.n_workers)
 
     def msg_cost(self) -> float:
         """Port occupancy of one logical transfer."""
@@ -175,6 +193,23 @@ def _sorted_events(events: list) -> tuple:
 # ---------------------------------------------------------------------------
 
 
+def _ring_allreduce_round(spec: ClusterSpec, t0: float,
+                          r: int) -> eventsim.SimResult:
+    """One bulk-synchronous partitioned ring AllReduce, gated at t0 (the
+    slowest worker's compute): 2(n-1) rounds — n-1 reduce-scatter + n-1
+    all-gather — each moving ONE size/n partition per worker to its right
+    neighbor, the exact wire pattern of ``CSGDRingExchange``. Makespan is
+    t0 + 2(n-1)(n_messages*t_lat + chunk*t_tr); the per-wire ledger
+    records 2(n-1) sends per worker per iteration."""
+    n = spec.n_workers
+    chunk = spec.partition_msg_mb()
+    msgs = [eventsim.Msg(t0, w, (w + 1) % n, chunk,
+                         f"{'reduce' if h < n - 1 else 'gather'}{r}.{h}",
+                         spec.n_messages)
+            for h in range(2 * (n - 1)) for w in range(n)]
+    return eventsim.simulate(msgs, t_lat=spec.t_lat, t_tr=spec.t_tr)
+
+
 def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1) -> Trace:
     """§1.3.2 synchronous PS: every round is compute -> uplink (serialized
     at the PS recv port) -> broadcast gated on full aggregation.
@@ -182,6 +217,12 @@ def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1) -> Trace:
     With zero compute and one round this is *identical arithmetic* to
     ``eventsim.single_ps_makespan`` (same two simulate() calls), which is
     the scheduler<->eventsim cross-check tests pin to 1e-9.
+
+    ``spec.allreduce == "ring"`` replaces the PS exchange with the
+    partitioned ring AllReduce (2(n-1) rounds of size/n chunks, gated on
+    the slowest worker — the bulk-synchronous decomposition of
+    ``CSGDRingExchange``); with zero compute its makespan equals
+    ``eventsim.csgd_ring_makespan`` exactly.
     """
     n, ps, s = spec.n_workers, spec.n_workers, spec.msg_mb()
     t = 0.0
@@ -191,6 +232,18 @@ def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1) -> Trace:
     recs: list = []
     for r in range(rounds):
         done = [t + spec.compute_time(w, r) for w in range(n)]
+        if spec.allreduce == "ring":
+            res = _ring_allreduce_round(spec, max(done), r)
+            comm += list(res.deliveries)
+            recs += list(res.messages)
+            t = res.makespan if res.deliveries else max(done)
+            for w in range(n):
+                events.append(TraceEvent("update", w, r, version, version,
+                                         0, t))
+            version += 1
+            events.append(TraceEvent("sync", PS, r, version - 1, version,
+                                     0, t))
+            continue
         up = eventsim.simulate(
             [eventsim.Msg(done[w], w, ps, s, f"agg{r}", spec.n_messages)
              for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
@@ -207,7 +260,8 @@ def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1) -> Trace:
         t = down.makespan
         events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
     return Trace("sync_ps", n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t, (("rounds", rounds),))
+                 tuple(recs), t,
+                 (("rounds", rounds), ("allreduce", spec.allreduce)))
 
 
 def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
@@ -215,7 +269,9 @@ def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
     """Local SGD: H local steps per worker between model-averaging rounds
     (the §4 relaxation that trades staleness for H-fold fewer barriers).
     Each local step is an applied update on that worker's replica; the
-    averaging round is a PS-pattern exchange of the MODEL."""
+    averaging round is a PS-pattern exchange of the MODEL —
+    or the partitioned ring AllReduce when ``spec.allreduce == "ring"``
+    (2(n-1) rounds of size/n chunks, same as schedule_sync_ps)."""
     n, ps, s = spec.n_workers, spec.n_workers, spec.msg_mb()
     t = 0.0
     version = 0
@@ -230,20 +286,29 @@ def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
                 done[w] += spec.compute_time(w, step)
                 events.append(TraceEvent("update", w, step, version,
                                          version, 0, done[w]))
-        up = eventsim.simulate(
-            [eventsim.Msg(done[w], w, ps, s, f"agg{r}", spec.n_messages)
-             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
-        down = eventsim.simulate(
-            [eventsim.Msg(up.makespan, ps, w, s, f"bc{r}", spec.n_messages)
-             for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
-        comm += list(up.deliveries) + list(down.deliveries)
-        recs += list(up.messages) + list(down.messages)
+        if spec.allreduce == "ring":
+            res = _ring_allreduce_round(spec, max(done), r)
+            comm += list(res.deliveries)
+            recs += list(res.messages)
+            t = res.makespan if res.deliveries else max(done)
+        else:
+            up = eventsim.simulate(
+                [eventsim.Msg(done[w], w, ps, s, f"agg{r}",
+                              spec.n_messages)
+                 for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+            down = eventsim.simulate(
+                [eventsim.Msg(up.makespan, ps, w, s, f"bc{r}",
+                              spec.n_messages)
+                 for w in range(n)], t_lat=spec.t_lat, t_tr=spec.t_tr)
+            comm += list(up.deliveries) + list(down.deliveries)
+            recs += list(up.messages) + list(down.messages)
+            t = down.makespan
         version += 1
-        t = down.makespan
         events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
     return Trace("local_sgd", n, _sorted_events(events), tuple(comm),
                  tuple(recs), t,
-                 (("rounds", rounds), ("period_h", period_h)))
+                 (("rounds", rounds), ("period_h", period_h),
+                  ("allreduce", spec.allreduce)))
 
 
 def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,

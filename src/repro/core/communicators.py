@@ -7,7 +7,8 @@ compression randomness, per-worker error state, exact update rules.
 
   MbSGDExchange      distributed baseline, Eq. (2.2)        pmean
   CSGDPSExchange     Eq. (3.2)  Q(1/N sum Q(g_n))           multi-server PS form
-  CSGDRingExchange   Eq. (3.3)  Q(..Q(Q(g_1)+g_2)..+g_N)    ring AllReduce form
+  CSGDRingExchange   Eq. (3.3)  per-partition chains        partitioned ring
+                     (reduce-scatter + all-gather, Fig 3.3) AllReduce
   ECSGDExchange      Eqs. (3.8)-(3.12) DoubleSqueeze        two-sided EC
   DelayedExchange    Assumption 5 bounded staleness (tau)   wraps any exchange
   GossipMix          Eq. (5.2)  X <- (X - gamma G) W        ppermute ring / pmean
@@ -128,8 +129,11 @@ class CSGDPSExchange:
         skey = jax.random.fold_in(key, 0x5E4E4)
         if self.flat:
             layout = compression.FlatLayout.from_tree(grad)
-            local_q = cdc.flat_qdq(layout.flatten(grad), wkey)
-            out = cdc.flat_qdq(lax.pmean(local_q, axis_name), skey)
+            # both inputs are dead temporaries (a fresh flatten, a pmean
+            # result) -> donate their storage to the qdq output
+            local_q = cdc.flat_qdq(layout.flatten(grad), wkey, donate=True)
+            out = cdc.flat_qdq(lax.pmean(local_q, axis_name), skey,
+                               donate=True)
             return layout.unflatten(out), state
         local_q = cdc.tree_qdq(grad, wkey)
         mean_q = lax.pmean(local_q, axis_name)
@@ -149,31 +153,44 @@ class CSGDPSExchange:
 
 @dataclasses.dataclass(frozen=True)
 class CSGDRingExchange:
-    """CSGD, ring-AllReduce form, Eq. (3.3).
+    """CSGD, ring-AllReduce form, Eq. (3.3) — partitioned by default.
 
-    The partial sum is re-compressed at every hop: after N-1 ppermute hops a
-    worker holds Q(..Q(Q(g_{i+1}) + g_{i+2}).. + g_i) — each worker ends with
-    a different nesting order, exactly like the per-partition chains of the
-    paper's Figure 3.3.
+    partitioned=True (default, needs a packable codec): the classic
+    bandwidth-optimal reduce-scatter + all-gather decomposition with the
+    paper's per-partition requantization chains (Figure 3.3). The flat
+    gradient buffer is sliced into N equal granule-aligned partitions,
+    each bucketed and packed independently:
 
-    For packable codecs the hop handoff moves the PACKED wire object
-    through ppermute — the collective really ships bits/element = codec
-    bits, not fp32 — and the hop arithmetic decodes, adds the local
-    gradient, and re-encodes. Because decode(encode(x, k)) == qdq(x, k)
-    bit-for-bit, this is numerically identical to the qdq formulation
-    used for non-packable codecs.
+      * reduce-scatter, N-1 hops: at hop h worker i receives the encoded
+        partial sum of partition (i-h) mod N from its left neighbor,
+        decodes, adds its OWN slice of that partition, re-encodes — so
+        partition p accumulates Q(..Q(Q(g_p[p]) + g_{p+1}[p]).. + g_{p+N-1}[p]),
+        exactly Eq. (3.3) applied per partition. Every hop ships ONE
+        partition: M/N wire bytes.
+      * all-gather, N-1 hops: finished partitions circulate VERBATIM
+        (payload + params bytes copied into the backing
+        PartitionedFlatPacked buffer, no re-quantization) until every
+        worker holds all N — hence the result is bit-identical across
+        workers, unlike the monolithic chain where each worker ends with
+        its own nesting order (both satisfy Eq. (3.3)'s recursion).
 
-    flat=True (default): the wire object is ONE FlatPacked for the whole
-    gradient tree — each hop ppermutes exactly one packed payload + one
-    bucketed params header, and the hop arithmetic runs on the flat fp32
-    buffer (decode + add + re-encode, no per-leaf dispatch). flat=False
-    keeps the per-leaf reference: a tree of Packed objects, 2L arrays
-    through ppermute per hop.
+    Per-worker wire bytes: 2(N-1) partition messages = 2*M*(N-1)/N (plus
+    at most one pad granule + params rows per partition), vs the
+    monolithic chain's (N-1)*M — the §1.3.3 "why do we partition"
+    argument, now carried by the real exchange.
+
+    partitioned=False keeps the monolithic chains: flat=True ships ONE
+    whole-tree FlatPacked per hop ((N-1 hops, full M each, per-worker
+    nesting orders); flat=False is the per-leaf reference (a tree of
+    Packed objects, 2L arrays through ppermute per hop). Non-packable
+    codecs always fall back to the monolithic qdq formulation — the
+    all-gather's verbatim forwarding needs a wire format.
     """
 
     compressor: str = "rq8"
     name: str = "csgd_ring"
     flat: bool = True
+    partitioned: bool = True
 
     def init(self, params: PyTree) -> PyTree:
         return ()
@@ -184,6 +201,10 @@ class CSGDRingExchange:
         perm = [(i, (i + 1) % n) for i in range(n)]
         wkey = _worker_key(key, axis_name)
 
+        if (self.flat and self.partitioned and cdc.packable
+                and isinstance(n, int) and n > 1):
+            return self._partitioned_allreduce(grad, state, key, cdc, n,
+                                               perm, axis_name)
         if self.flat and cdc.packable and isinstance(n, int) and n > 1:
             layout = compression.FlatLayout.from_tree(grad)
             gflat = layout.flatten(grad)
@@ -221,12 +242,89 @@ class CSGDRingExchange:
                 out = lax.fori_loop(1, n, hop_qdq, out)
         return jax.tree_util.tree_map(lambda a: a / n, out), state
 
+    def _partitioned_allreduce(self, grad, state, key, cdc, n: int, perm,
+                               axis_name: str):
+        """Reduce-scatter + all-gather over the N-way partition view."""
+        i = lax.axis_index(axis_name)
+        wkey = _worker_key(key, axis_name)
+        layout = compression.FlatLayout.from_tree(grad)
+        part_elems, _, _ = cdc.partition_geometry(layout.total, n)
+        from repro.kernels.quant import ops as _qops
+        padded = _qops.edge_pad(layout.flatten(grad), n * part_elems)
+        gparts = padded.reshape(n, part_elems)
+
+        def local_slice(pidx):
+            return lax.dynamic_index_in_dim(gparts, pidx, 0,
+                                            keepdims=False)
+
+        # --- reduce-scatter: hop h ships the partial sum of partition
+        # (i - h) mod N; decode-add-re-encode touches 1/N of the buffer.
+        pay, prm = cdc.encode_partition(local_slice(i), wkey)
+
+        def rs_hop(h, carry):
+            pay, prm = carry
+            pay = lax.ppermute(pay, axis_name, perm)
+            prm = lax.ppermute(prm, axis_name, perm)
+            pidx = (i - h) % n
+            summed = cdc.decode_partition(
+                pay, prm, part_elems=part_elems) + local_slice(pidx)
+            return cdc.encode_partition(summed,
+                                        jax.random.fold_in(wkey, h))
+
+        pay, prm = lax.fori_loop(1, n, rs_hop, (pay, prm))
+
+        # --- all-gather: worker i finished partition (i+1) mod N; N-1
+        # hops forward finished partitions VERBATIM (no re-encode) into
+        # one backing buffer — every worker ends bit-identical.
+        payload_all = jnp.zeros((n,) + pay.shape, pay.dtype)
+        params_all = jnp.zeros((n,) + prm.shape, prm.dtype)
+        own = (i + 1) % n
+        payload_all = lax.dynamic_update_index_in_dim(payload_all, pay,
+                                                      own, 0)
+        params_all = lax.dynamic_update_index_in_dim(params_all, prm,
+                                                     own, 0)
+
+        def ag_hop(g, carry):
+            pa, pr, pay, prm = carry
+            pay = lax.ppermute(pay, axis_name, perm)
+            prm = lax.ppermute(prm, axis_name, perm)
+            idx = (i + 1 - g) % n
+            pa = lax.dynamic_update_index_in_dim(pa, pay, idx, 0)
+            pr = lax.dynamic_update_index_in_dim(pr, prm, idx, 0)
+            return pa, pr, pay, prm
+
+        payload_all, params_all, _, _ = lax.fori_loop(
+            1, n, ag_hop, (payload_all, params_all, pay, prm))
+
+        packed = compression.PartitionedFlatPacked(
+            payload_all, params_all, layout, cdc.name,
+            compression.DEFAULT_BUCKET_ELEMS, part_elems)
+        out = cdc.flat_decode_partitioned(packed) / n
+        return layout.unflatten(out), state
+
     def message_bytes(self, tree, *, n_workers: int = 2) -> float:
-        """n-1 hops per iteration, one packed message sent per hop."""
+        """Partitioned: 2(n-1) partition messages per iteration
+        (= 2*M*(n-1)/n + pad/header overhead); monolithic: n-1 hops of
+        one whole-tree message each."""
         cdc = compression.codec(self.compressor)
+        hops = max(n_workers - 1, 1)
+        if self.flat and self.partitioned and cdc.packable and n_workers > 1:
+            return 2.0 * hops * cdc.tree_wire_bytes_partitioned(
+                tree, n_workers)
         per_hop = (cdc.tree_wire_bytes_flat(tree) if self.flat
                    else cdc.tree_wire_bytes(tree))
-        return max(n_workers - 1, 1) * per_hop
+        return hops * per_hop
+
+    def n_wire_messages(self, n_workers: int) -> int:
+        """Wire messages one worker sends per iteration (eventsim's
+        per-message latency accounting): 2(n-1) partition messages on the
+        partitioned path, n-1 whole-buffer messages on the monolithic
+        chains."""
+        cdc = compression.codec(self.compressor)
+        hops = max(n_workers - 1, 1)
+        if self.flat and self.partitioned and cdc.packable and n_workers > 1:
+            return 2 * hops
+        return hops
 
 
 @dataclasses.dataclass(frozen=True)

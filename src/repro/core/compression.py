@@ -29,6 +29,23 @@ exchange while the fused tier pays `2N*t_lat`; eventsim's `n_messages`
 knob makes that gap measurable. The per-leaf paths remain the reference
 the fused tier is tested against (bit-identical per bucket).
 
+The flat pipeline is **zero-copy**: flatten writes every leaf into one
+preallocated buffer (`dynamic_update_slice`, never `concatenate`),
+per-bucket (lo, scale) come out of ONE fused min+max read, head and
+tail payload land in one preallocated output, and the whole
+flatten->stats->encode chain traces as a single jitted program keyed on
+the (lru-cached) FlatLayout. A donated qdq variant lets callers hand a
+dead buffer's storage to the output.
+
+The **partitioned view** (`PartitionedFlatPacked`,
+`tree_encode_partitioned`) slices the same flat buffer into N equal,
+granule-aligned partitions — each with its own bucket rows, all views
+over one backing buffer — the wire unit of the bandwidth-optimal ring
+AllReduce (Figure 3.3's per-partition chains): a reduce-scatter hop
+ships ONE partition (M/N bytes), the all-gather hops forward finished
+partitions verbatim, so a worker puts 2*M*(N-1)/N bytes on the wire per
+iteration instead of the monolithic chain's (N-1)*M.
+
 `CompressionSpec` remains the static metadata *inside* each codec; the
 cost-model consumers (eventsim / roofline / table1_1 / comm_patterns)
 take `Codec.wire_bytes(...)`, which for packable codecs is measured from
@@ -46,11 +63,12 @@ the operators are usable inside jit/shard_map.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,30 +138,41 @@ class FlatLayout:
 
     @classmethod
     def from_tree(cls, tree) -> "FlatLayout":
+        """Layout for `tree`, cached on (treedef, shapes, dtypes).
+
+        Exchanges and train steps call this on every trace; the offset
+        table only depends on the static structure, so repeat calls hit
+        an lru_cache instead of rebuilding it."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         shapes = tuple(tuple(leaf.shape) for leaf in leaves)
         dtypes = tuple(jnp.dtype(getattr(leaf, "dtype", jnp.float32))
                        for leaf in leaves)
-        sizes, offsets, off = [], [], 0
-        for shape in shapes:
-            n = 1
-            for d in shape:
-                n *= d
-            sizes.append(n)
-            offsets.append(off)
-            off += n
-        return cls(treedef, shapes, dtypes, tuple(offsets), tuple(sizes),
-                   off)
+        return _cached_layout(treedef, shapes, dtypes)
 
     @property
     def n_leaves(self) -> int:
         return len(self.shapes)
 
     def flatten(self, tree) -> jnp.ndarray:
-        """Pytree -> one contiguous (total,) fp32 buffer."""
+        """Pytree -> one contiguous (total,) fp32 buffer.
+
+        Under a trace, every leaf is written into ONE preallocated
+        buffer via ``dynamic_update_slice`` (static offsets) instead of
+        ``jnp.concatenate`` — XLA turns the chain into in-place writes,
+        so the buffer is materialized once and the fused codec entry
+        points (see QuantCodec) keep their jaxprs concatenate-free.
+        Eagerly, that same chain would copy the WHOLE buffer once per
+        leaf (O(L * total)), so un-traced calls use the one-pass
+        concatenate instead."""
         leaves = jax.tree_util.tree_leaves(tree)
-        return jnp.concatenate(
-            [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+        if not any(isinstance(leaf, jax.core.Tracer) for leaf in leaves):
+            return jnp.concatenate(
+                [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+        out = jnp.zeros((self.total,), jnp.float32)
+        for leaf, off in zip(leaves, self.offsets):
+            out = lax.dynamic_update_slice(
+                out, leaf.reshape(-1).astype(jnp.float32), (off,))
+        return out
 
     def unflatten(self, flat: jnp.ndarray):
         """(total,) buffer -> pytree with the original shapes/dtypes."""
@@ -153,6 +182,23 @@ class FlatLayout:
                                           self.shapes, self.dtypes)
         ]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+@lru_cache(maxsize=512)
+def _cached_layout(treedef, shapes: tuple, dtypes: tuple) -> "FlatLayout":
+    """Offset-table construction, memoized on the static structure so
+    ``CSGDRingExchange.__call__`` / ``ECSGD`` / ``make_train_step`` stop
+    rebuilding the table on every trace."""
+    sizes, offsets, off = [], [], 0
+    for shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        sizes.append(n)
+        offsets.append(off)
+        off += n
+    return FlatLayout(treedef, shapes, dtypes, tuple(offsets), tuple(sizes),
+                      off)
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +281,70 @@ class FlatPacked:
         return int(payload + header)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PartitionedFlatPacked:
+    """A whole-tree compressed message as N per-partition views over ONE
+    backing buffer (the partitioned ring AllReduce's wire object).
+
+    payload: (n_parts, rows_p, 512) uint8 — partition p's packed codes
+             are the contiguous slab ``payload[p]``; no copies, the
+             partition view is plain leading-axis indexing of the single
+             backing buffer.
+    params:  (n_parts, nb_p, 2) fp32 — partition p's own bucket rows.
+    layout / codec / bucket_elems / part_elems: static decode metadata;
+             part_elems is the granule-aligned elements per partition
+             (the flat buffer is edge-padded to n_parts * part_elems).
+
+    The ring's reduce-scatter hops ship ONE partition (``part(p)``: two
+    arrays, M/N payload bytes); the all-gather hops copy finished
+    partitions into this buffer verbatim — the object every worker ends
+    the exchange holding, bit-identical across workers.
+    """
+
+    payload: jnp.ndarray
+    params: jnp.ndarray
+    layout: FlatLayout
+    codec: str
+    bucket_elems: int
+    part_elems: int
+
+    def tree_flatten(self):
+        return (self.payload, self.params), (self.layout, self.codec,
+                                             self.bucket_elems,
+                                             self.part_elems)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def n_parts(self) -> int:
+        return self.payload.shape[0]
+
+    def part(self, p) -> tuple:
+        """Partition p's (payload, params) — views over the backing
+        buffer (leading-axis indexing), never a copy."""
+        return self.payload[p], self.params[p]
+
+    @property
+    def part_wire_bytes(self) -> int:
+        """Measured bytes of ONE partition message (what a ring hop
+        ships): its payload slab + its own params rows."""
+        pay = (self.payload.size // self.n_parts
+               * jnp.dtype(self.payload.dtype).itemsize)
+        hdr = (self.params.size // self.n_parts
+               * jnp.dtype(self.params.dtype).itemsize)
+        return int(pay + hdr)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Measured size of all partitions: payload + params bytes."""
+        payload = self.payload.size * jnp.dtype(self.payload.dtype).itemsize
+        header = self.params.size * jnp.dtype(self.params.dtype).itemsize
+        return int(payload + header)
+
+
 # ---------------------------------------------------------------------------
 # Codecs
 # ---------------------------------------------------------------------------
@@ -289,14 +399,18 @@ class Codec:
     # methods above remain the reference the fused path is tested against.
 
     def flat_qdq(self, flat: jnp.ndarray, key: Optional[jax.Array], *,
-                 bucket_elems: int = DEFAULT_BUCKET_ELEMS) -> jnp.ndarray:
+                 bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+                 donate: bool = False) -> jnp.ndarray:
         """Fused qdq over one flat fp32 buffer (one message's worth).
 
         Base implementation: a single application of the operator to the
         whole buffer — qdq-only codecs get the fused (one-pass, one-
         message) semantics for free. QuantCodec overrides this with the
-        bucketed kernel."""
-        del bucket_elems
+        bucketed kernel. ``donate=True`` hands the buffer's storage to
+        the output (same shape/dtype) — pass it only when the caller's
+        buffer is dead after the call (a hop temporary, a fresh flatten);
+        ignored here in the base class."""
+        del bucket_elems, donate
         return self.qdq(flat, key)
 
     def flat_encode(self, flat: jnp.ndarray, key: Optional[jax.Array],
@@ -344,6 +458,18 @@ class Codec:
                     bucket_elems=bucket_elems), flat, key)
         return float(out.wire_bytes)
 
+    def tree_wire_bytes_partitioned(self, tree, n_parts: int, *,
+                                    bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                                    ) -> float:
+        """Measured wire bytes of ONE partition message — the unit the
+        partitioned ring ships per hop (2(N-1) of them per worker per
+        iteration = 2*M*(N-1)/N total, up to one pad granule per
+        partition). Base implementation: the static-spec bytes of a
+        1/n_parts slice; QuantCodec measures the packed format."""
+        del bucket_elems
+        layout = FlatLayout.from_tree(tree)
+        return self.spec.compressed_bytes(-(-layout.total // n_parts))
+
     # -- pytrees ----------------------------------------------------------
 
     def tree_qdq(self, tree, key: jax.Array):
@@ -364,6 +490,85 @@ class Codec:
     def tree_wire_bytes(self, tree) -> float:
         return sum(self.wire_bytes(leaf)
                    for leaf in jax.tree_util.tree_leaves(tree))
+
+
+# End-to-end jitted fused tree paths (QuantCodec): flatten + stats +
+# encode/decode trace as ONE XLA program keyed on the (cached, hashable)
+# FlatLayout, so no intermediate buffer is materialized between the
+# pipeline stages and repeat calls re-dispatch one compiled executable.
+
+
+@partial(jax.jit, static_argnames=("layout", "bits", "bucket_elems",
+                                   "backend"))
+def _tree_qdq_flat_fused(tree, key, *, layout: FlatLayout, bits: int,
+                         bucket_elems: int, backend: str):
+    from repro.kernels.quant import ops
+    flat = ops.qdq_flat(layout.flatten(tree), key, bits=bits,
+                        bucket_elems=bucket_elems, backend=backend)
+    return layout.unflatten(flat)
+
+
+@partial(jax.jit, static_argnames=("layout", "bits", "bucket_elems",
+                                   "backend"))
+def _tree_encode_flat_fused(tree, key, *, layout: FlatLayout, bits: int,
+                            bucket_elems: int, backend: str):
+    from repro.kernels.quant import ops
+    if not ops._use_pallas(backend):
+        # jnp reference tier: cache-blocked encode straight from the
+        # leaves — the flat buffer is never materialized; each bucket is
+        # assembled, statted, drawn, and packed while cache-hot.
+        # Bit-identical to the flatten + encode_flat pipeline below.
+        return ops.encode_flat_blocked(
+            jax.tree_util.tree_leaves(tree), layout.offsets, layout.total,
+            key, bits=bits, bucket_elems=bucket_elems)
+    return ops.encode_flat(layout.flatten(tree), key, bits=bits,
+                           bucket_elems=bucket_elems, backend=backend)
+
+
+@partial(jax.jit, static_argnames=("layout", "bits", "bucket_elems",
+                                   "backend"))
+def _tree_decode_flat_fused(payload, params, *, layout: FlatLayout,
+                            bits: int, bucket_elems: int, backend: str):
+    from repro.kernels.quant import ops
+    flat = ops.decode_flat(payload, params, total=layout.total, bits=bits,
+                           bucket_elems=bucket_elems, backend=backend)
+    return layout.unflatten(flat)
+
+
+def _encode_partitions(flat, key, *, n_parts: int, part_elems: int,
+                       bits: int, bucket_elems: int, backend: str):
+    """THE partition-encode pipeline: edge-pad the flat buffer to
+    n_parts * part_elems, view it as equal partitions, and encode
+    partition p under fold_in(key, p) (one vmapped draw — bit-identical
+    to per-key draws). Single source of the partition keying, shared by
+    ``flat_encode_partitioned`` and the fused tree path; the ring
+    exchange's per-hop re-encodes use per-(worker, hop) keys instead,
+    by construction of Eq. (3.3)'s chains."""
+    from repro.kernels.quant import ops
+    padded = ops.edge_pad(flat.reshape(-1).astype(jnp.float32),
+                          n_parts * part_elems)
+    parts = padded.reshape(n_parts, part_elems)
+    return jax.vmap(
+        lambda x, p: ops.encode_flat(x, jax.random.fold_in(key, p),
+                                     bits=bits, bucket_elems=bucket_elems,
+                                     backend=backend)
+    )(parts, jnp.arange(n_parts))
+
+
+@partial(jax.jit, static_argnames=("layout", "n_parts", "bits",
+                                   "bucket_elems", "backend"))
+def _tree_encode_partitioned_fused(tree, key, *, layout: FlatLayout,
+                                   n_parts: int, bits: int,
+                                   bucket_elems: int, backend: str):
+    """Flatten + partition + encode in ONE jitted program (an eager
+    flatten would copy the whole buffer once per leaf)."""
+    from repro.kernels.quant import ops
+    part_elems, _, _ = ops.partition_geometry(layout.total, n_parts,
+                                              bits=bits,
+                                              bucket_elems=bucket_elems)
+    return _encode_partitions(layout.flatten(tree), key, n_parts=n_parts,
+                              part_elems=part_elems, bits=bits,
+                              bucket_elems=bucket_elems, backend=backend)
 
 
 class QuantCodec(Codec):
@@ -400,10 +605,12 @@ class QuantCodec(Codec):
 
     # fused flat-buffer tier: bucketed kernels (grid over buckets)
 
-    def flat_qdq(self, flat, key, *, bucket_elems=DEFAULT_BUCKET_ELEMS):
+    def flat_qdq(self, flat, key, *, bucket_elems=DEFAULT_BUCKET_ELEMS,
+                 donate=False):
         from repro.kernels.quant import ops
-        return ops.qdq_flat(flat, key, bits=self.bits,
-                            bucket_elems=bucket_elems, backend=self.backend)
+        fn = ops.qdq_flat_donated if donate else ops.qdq_flat
+        return fn(flat, key, bits=self.bits,
+                  bucket_elems=bucket_elems, backend=self.backend)
 
     def flat_encode(self, flat, key, layout: FlatLayout, *,
                     bucket_elems=DEFAULT_BUCKET_ELEMS) -> FlatPacked:
@@ -419,6 +626,116 @@ class QuantCodec(Codec):
                                total=packed.layout.total, bits=self.bits,
                                bucket_elems=packed.bucket_elems,
                                backend=self.backend)
+
+    # fused tree entry points: ONE jit spanning flatten -> stats -> encode
+    # (keyed on the cached FlatLayout), so the flat buffer and every view
+    # of it live inside a single XLA program — flatten's
+    # dynamic_update_slice writes fuse with the encode read instead of
+    # materializing eager intermediates (the PR-2 copy tax).
+
+    def tree_qdq_flat(self, tree, key, *,
+                      bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+        layout = FlatLayout.from_tree(tree)
+        return _tree_qdq_flat_fused(tree, key, layout=layout,
+                                    bits=self.bits,
+                                    bucket_elems=bucket_elems,
+                                    backend=self.backend)
+
+    def tree_encode_flat(self, tree, key, *,
+                         bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                         ) -> FlatPacked:
+        layout = FlatLayout.from_tree(tree)
+        payload, params = _tree_encode_flat_fused(
+            tree, key, layout=layout, bits=self.bits,
+            bucket_elems=bucket_elems, backend=self.backend)
+        return FlatPacked(payload, params, layout, self.name, bucket_elems)
+
+    def tree_decode_flat(self, packed: FlatPacked):
+        return _tree_decode_flat_fused(
+            packed.payload, packed.params, layout=packed.layout,
+            bits=self.bits, bucket_elems=packed.bucket_elems,
+            backend=self.backend)
+
+    # partitioned tier: the flat buffer as n_parts equal, granule-aligned
+    # slices, each bucketed and packed independently — the unit of the
+    # ring AllReduce's reduce-scatter / all-gather hops.
+
+    def partition_geometry(self, total: int, n_parts: int, *,
+                           bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+        """(part_elems, nb_p, rows_p) of the N-way partition view."""
+        from repro.kernels.quant import ops
+        return ops.partition_geometry(total, n_parts, bits=self.bits,
+                                      bucket_elems=bucket_elems)
+
+    def encode_partition(self, part: jnp.ndarray, key, *,
+                         bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+        """ONE partition (a granule-aligned (part_elems,) slice) ->
+        (payload (rows_p, 512) uint8, params (nb_p, 2)) — the ring hop's
+        wire message."""
+        from repro.kernels.quant import ops
+        return ops.encode_flat(part, key, bits=self.bits,
+                               bucket_elems=bucket_elems,
+                               backend=self.backend)
+
+    def decode_partition(self, payload, params, *, part_elems: int,
+                         bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+        """Inverse of encode_partition: -> (part_elems,) fp32."""
+        from repro.kernels.quant import ops
+        return ops.decode_flat(payload, params, total=part_elems,
+                               bits=self.bits, bucket_elems=bucket_elems,
+                               backend=self.backend)
+
+    def flat_encode_partitioned(self, flat, key, layout: FlatLayout, *,
+                                n_parts: int,
+                                bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                                ) -> PartitionedFlatPacked:
+        """Encode every partition of a flat buffer into ONE backing
+        (n_parts, rows_p, 512) payload + (n_parts, nb_p, 2) params pair
+        (partition p under key fold_in(key, p))."""
+        part_elems, _, _ = self.partition_geometry(
+            layout.total, n_parts, bucket_elems=bucket_elems)
+        payload, params = _encode_partitions(
+            flat, key, n_parts=n_parts, part_elems=part_elems,
+            bits=self.bits, bucket_elems=bucket_elems,
+            backend=self.backend)
+        return PartitionedFlatPacked(payload, params, layout, self.name,
+                                     bucket_elems, part_elems)
+
+    def flat_decode_partitioned(self, packed: PartitionedFlatPacked):
+        """All partitions -> the (total,) fp32 flat buffer (pad trimmed)."""
+        dec = jax.vmap(
+            lambda p, pr: self.decode_partition(
+                p, pr, part_elems=packed.part_elems,
+                bucket_elems=packed.bucket_elems)
+        )(packed.payload, packed.params)
+        return dec.reshape(-1)[: packed.layout.total]
+
+    def tree_encode_partitioned(self, tree, key, n_parts: int, *,
+                                bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                                ) -> PartitionedFlatPacked:
+        """Whole tree -> n_parts partition messages over one buffer
+        (flatten + partition + encode as one jitted program)."""
+        layout = FlatLayout.from_tree(tree)
+        part_elems, _, _ = self.partition_geometry(
+            layout.total, n_parts, bucket_elems=bucket_elems)
+        payload, params = _tree_encode_partitioned_fused(
+            tree, key, layout=layout, n_parts=n_parts, bits=self.bits,
+            bucket_elems=bucket_elems, backend=self.backend)
+        return PartitionedFlatPacked(payload, params, layout, self.name,
+                                     bucket_elems, part_elems)
+
+    def tree_decode_partitioned(self, packed: PartitionedFlatPacked):
+        """Inverse of tree_encode_partitioned."""
+        return packed.layout.unflatten(self.flat_decode_partitioned(packed))
+
+    def tree_wire_bytes_partitioned(self, tree, n_parts: int, *,
+                                    bucket_elems: int = DEFAULT_BUCKET_ELEMS
+                                    ) -> float:
+        from repro.kernels.quant import ops
+        layout = FlatLayout.from_tree(tree)
+        _, nb_p, rows_p = self.partition_geometry(
+            layout.total, n_parts, bucket_elems=bucket_elems)
+        return float(rows_p * ops.LANES + nb_p * 8)
 
 
 class QdqCodec(Codec):

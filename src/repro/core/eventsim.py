@@ -38,6 +38,12 @@ by leaf sets n_messages = L (ring exchange latency ~ 2 N L t_lat), the
 fused flat-buffer tier sets n_messages = 1 (~ 2 N t_lat) — the paper's
 own argument for why latency, not bandwidth, dominates small messages.
 
+``csgd_ring_makespan`` / ``ring_wire_mb_per_worker`` cost the REAL
+CSGDRingExchange: partitioned (default) is the reduce-scatter +
+all-gather decomposition — 2(N-1) partition messages per worker, size/N
+each, total 2M(N-1)/N wire bytes — vs the monolithic chain's N-1 full-M
+hops; both match the exchange's ``message_bytes``/``n_wire_messages``.
+
 Example 1.3.2's "14 vs 9 units" figure reads one unit differently than these
 semantics (we get 13 vs 8) but the *saving* — exactly the halved transfer
 time, latency untouched — matches; asserted in tests.
@@ -256,6 +262,42 @@ def ring_allreduce_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
     """
     chunk = _msg_mb(size, compression, codec, n_chunks=n if partitioned else 1)
     return 2 * (n - 1) * (n_messages * t_lat + chunk * t_tr)
+
+
+def csgd_ring_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
+                       partitioned: bool = True, compression: float = 1.0,
+                       codec: Optional[str] = None,
+                       n_messages: int = 1) -> float:
+    """Cost of ONE CSGDRingExchange iteration under the switch model.
+
+    partitioned=True (the exchange's default): reduce-scatter +
+    all-gather — 2(n-1) rounds, each moving ONE partition (size/n) per
+    worker, so per-worker wire bytes are 2*M*(n-1)/n and the makespan is
+    2(n-1)(n_messages*t_lat + (size/n)*t_tr). partitioned=False is the
+    monolithic chain: n-1 hops each shipping the FULL buffer (every
+    worker builds its own complete nesting, no gather phase) —
+    (n-1)(n_messages*t_lat + size*t_tr) with per-worker wire bytes
+    (n-1)*M. Codec sizing is measured per message (`wire_size_mb` of a
+    partition's / the buffer's element count), matching the exchange's
+    `message_bytes` to within one pad granule per partition.
+    """
+    if partitioned:
+        chunk = _msg_mb(size, compression, codec, n_chunks=n)
+        return 2 * (n - 1) * (n_messages * t_lat + chunk * t_tr)
+    full = _msg_mb(size, compression, codec)
+    return (n - 1) * (n_messages * t_lat + full * t_tr)
+
+
+def ring_wire_mb_per_worker(n: int, size: float, *,
+                            partitioned: bool = True,
+                            compression: float = 1.0,
+                            codec: Optional[str] = None) -> float:
+    """Wire MB ONE worker sends per ring AllReduce iteration:
+    2(n-1) * size/n partitioned (the bandwidth-optimal 2M(N-1)/N), vs
+    (n-1) * size monolithic."""
+    if partitioned:
+        return 2 * (n - 1) * _msg_mb(size, compression, codec, n_chunks=n)
+    return (n - 1) * _msg_mb(size, compression, codec)
 
 
 def multi_ps_makespan(n: int, size: float, *, t_lat: float, t_tr: float,

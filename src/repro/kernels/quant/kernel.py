@@ -211,6 +211,52 @@ def encode_packed_bucketed(x4: jnp.ndarray, u4: jnp.ndarray,
     )(params, x4, u4)
 
 
+def _minmax_bucketed_kernel(x_ref, o_ref, *, n_rows: int, block_r: int):
+    """x_ref: (1, BLOCK_R, C) one bucket's row tile; o_ref: (1, 2) the
+    bucket's [lo, hi], accumulated across the (sequential) row-tile grid
+    dimension — the output block revisits for every row tile of the same
+    bucket, so this is a single-read fused min+max reduction. Rows past
+    n_rows (grid padding of the last tile) are masked out of the
+    reduction: padded values must never touch the bucket's range."""
+    i = pl.program_id(1)
+    x = x_ref[0]
+    row = i * block_r + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    valid = row < n_rows
+    tile_lo = jnp.min(jnp.where(valid, x, jnp.inf))
+    tile_hi = jnp.max(jnp.where(valid, x, -jnp.inf))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = tile_lo
+        o_ref[0, 1] = tile_hi
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[0, 0] = jnp.minimum(o_ref[0, 0], tile_lo)
+        o_ref[0, 1] = jnp.maximum(o_ref[0, 1], tile_hi)
+
+
+def minmax_bucketed(x3: jnp.ndarray, *, block_r: int,
+                    interpret: bool) -> jnp.ndarray:
+    """x3: (B, R, C) fp32 bucket view -> (B, 2) per-bucket [lo, hi].
+
+    One read of the buffer (min and max in the same pass), vs the two
+    separate reduction passes of jnp.min + jnp.max. min/max accumulate
+    exactly, so the result is bit-identical to the jnp reference.
+    """
+    b, r, c = x3.shape
+    kernel = functools.partial(_minmax_bucketed_kernel, n_rows=r,
+                               block_r=block_r)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, pl.cdiv(r, block_r)),
+        in_specs=[pl.BlockSpec((1, block_r, c), lambda bi, i: (bi, i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        interpret=interpret,
+    )(x3)
+
+
 def decode_packed_bucketed(payload: jnp.ndarray, params: jnp.ndarray, *,
                            bits: int, out_dtype, block_r: int,
                            interpret: bool) -> jnp.ndarray:

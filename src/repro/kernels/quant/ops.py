@@ -28,6 +28,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.kernels.quant import kernel, ref
 
@@ -163,6 +164,78 @@ def _align_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def edge_pad(flat: jnp.ndarray, padded_len: int) -> jnp.ndarray:
+    """Zero-copy-pipeline edge pad: write `flat` and a broadcast of its
+    last element into one preallocated buffer via dynamic_update_slice
+    (``jnp.pad(mode='edge')`` lowers through concatenate — the copy tax
+    this tier exists to avoid). Repeating the last REAL element keeps the
+    pad out of every bucket's (lo, hi)."""
+    n = flat.shape[0]
+    if padded_len == n:
+        return flat
+    out = jnp.zeros((padded_len,), flat.dtype)
+    out = lax.dynamic_update_slice(out, flat, (0,))
+    tail = jnp.broadcast_to(flat[-1], (padded_len - n,))
+    return lax.dynamic_update_slice(out, tail, (n,))
+
+
+def _stack2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(B,), (B,) -> (B, 2) without a concatenate/stack op (single-buffer
+    writes, same contract as the payload assembly below)."""
+    out = jnp.zeros((a.shape[0], 2), jnp.float32)
+    out = lax.dynamic_update_slice(out, a.astype(jnp.float32)[:, None],
+                                   (0, 0))
+    return lax.dynamic_update_slice(out, b.astype(jnp.float32)[:, None],
+                                    (0, 1))
+
+
+def bucket_params(x2: jnp.ndarray, *, bits: int,
+                  backend: str) -> jnp.ndarray:
+    """Per-bucket (n_buckets, 2) [lo, scale] rows in ONE read of the
+    buffer: min and max come out of the same reduction pass (the Pallas
+    ``minmax_bucketed`` kernel on the pallas backend, a variadic
+    ``lax.reduce`` on the jnp reference) instead of the separate min pass
+    + max pass. The stats pass cannot fuse further into the encode kernel
+    itself — stochastic rounding needs the bucket-global (lo, scale)
+    before any element can be coded — so the flat pipeline's floor is two
+    reads: one fused stats pass + one encode pass."""
+    levels = (1 << bits) - 1
+    if _use_pallas(backend):
+        nb, cap = x2.shape
+        mm = kernel.minmax_bucketed(
+            x2.reshape(nb, cap // LANES, LANES),
+            block_r=_block_r(LANES, 4), interpret=_interpret())
+        lo, hi = mm[:, 0], mm[:, 1]
+    else:
+        lo, hi = ref.minmax_bucketed(x2)
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    return _stack2(lo, scale)
+
+
+def partition_geometry(total: int, n_parts: int, *, bits: int,
+                       bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+    """Equal, granule-aligned N-way partition view of a flat buffer (the
+    ring AllReduce's reduce-scatter/all-gather unit).
+
+    Returns (part_elems, nb_p, rows_p): each of the n_parts partitions
+    owns part_elems contiguous elements of the (edge-padded to
+    n_parts * part_elems) flat buffer — granule-aligned, so every
+    partition segment-packs independently — and has its own bucket rows:
+    nb_p (lo, scale) params rows and rows_p payload rows. Per-partition
+    wire bytes = rows_p * LANES + nb_p * 8; a full partitioned exchange
+    ships 2(N-1) of these per worker = 2*M*(N-1)/N + at most one pad
+    granule per partition.
+    """
+    if n_parts <= 0:
+        raise ValueError(f"need n_parts >= 1, got {n_parts}")
+    pack = 8 // bits
+    granule = pack * LANES
+    part_elems = _align_up(max(1, -(-total // n_parts)), granule)
+    _, _, nb_p, _, rows_p = flat_geometry(part_elems, bits=bits,
+                                          bucket_elems=bucket_elems)
+    return part_elems, nb_p, rows_p
+
+
 def flat_geometry(total: int, *, bits: int,
                   bucket_elems: int = DEFAULT_BUCKET_ELEMS):
     """Static bucket geometry for a flat buffer of `total` elements.
@@ -186,83 +259,171 @@ def flat_geometry(total: int, *, bits: int,
     return pack, cap, n_buckets, rows_b, rows_kept
 
 
-def _bucket_views(flat: jnp.ndarray, key, *, bits: int, bucket_elems: int):
+def bucket_key(key, b):
+    """Bucket b's uniform-draw key: fold_in(key, b). The SINGLE source of
+    per-bucket randomness for every fused path — the vectorized
+    encode_flat/qdq_flat (vmapped draw, bit-identical to per-key draws
+    because threefry is counter-based) AND the cache-blocked from-tree
+    encode draw the exact same bits per bucket."""
+    return jax.random.fold_in(key, b)
+
+
+def _bucket_views(flat: jnp.ndarray, key, *, bits: int, bucket_elems: int,
+                  backend: str):
     """Split a flat buffer into head/tail segment views + per-bucket params.
 
-    head: the n_buckets-1 full buckets as a (B-1, pack, Rb, C) view (None
-    when there is a single bucket); tail: the last bucket, edge-padded to
-    its own granule, as a (pack, Rt, C) view. ONE uniform draw covers
-    head + padded tail, so qdq_flat and encode_flat consume identical
-    per-element uniforms (bit-identical results). Edge-mode padding
-    repeats the last real element, so the pad never perturbs the tail
-    bucket's (lo, hi)."""
+    The buffer is edge-padded ONCE (single-buffer writes, no concatenate)
+    to n_buckets * cap; every view below — the (nb, cap) stats view, the
+    head's (B-1, pack, Rb, C) segments, the tail's (pack, Rt, C) segments
+    — is a slice/reshape of that one padded buffer, so nothing else is
+    materialized. Per-bucket [lo, scale] come from ``bucket_params``
+    (min+max fused into one reduction read). Edge padding repeats the
+    last REAL element, so the pad never perturbs the tail bucket's
+    (lo, hi). Uniforms are drawn PER BUCKET under ``bucket_key(key, b)``
+    (head buckets via one vmapped draw), so qdq_flat, encode_flat, and
+    the cache-blocked from-tree encode all consume identical per-element
+    randomness (bit-identical results)."""
     pack, cap, nb, rows_b, _ = flat_geometry(flat.size, bits=bits,
                                              bucket_elems=bucket_elems)
     granule = pack * LANES
     flat = flat.reshape(-1).astype(jnp.float32)
+    total = flat.shape[0]
     head_elems = (nb - 1) * cap
-    tail = flat[head_elems:]
-    t = tail.shape[0]
+    t = total - head_elems
     rt = -(-t // granule)
-    # per-bucket [lo, scale] rows (tail's from its REAL elements only)
-    levels = (1 << bits) - 1
-    los, his = [], []
-    if nb > 1:
-        head2 = flat[:head_elems].reshape(nb - 1, cap)
-        los.append(jnp.min(head2, axis=1))
-        his.append(jnp.max(head2, axis=1))
-    los.append(jnp.min(tail)[None])
-    his.append(jnp.max(tail)[None])
-    lo = jnp.concatenate(los)
-    hi = jnp.concatenate(his)
-    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
-    params = jnp.stack([lo, scale], axis=1)          # (n_buckets, 2)
-    # one uniform draw over head + granule-padded tail: encode and qdq see
-    # the same per-element randomness
-    u = (None if key is None else
-         jax.random.uniform(key, (head_elems + rt * granule,), jnp.float32))
+    padded = edge_pad(flat, nb * cap)
+    params = bucket_params(padded.reshape(nb, cap), bits=bits,
+                           backend=backend)
     x4 = u4 = None
     if nb > 1:
-        x4 = flat[:head_elems].reshape(nb - 1, pack, rows_b, LANES)
-        if u is not None:
-            u4 = u[:head_elems].reshape(x4.shape)
-    tail_pad = jnp.pad(tail, (0, rt * granule - t), mode="edge")
-    x3 = tail_pad.reshape(pack, rt, LANES)
-    u3 = None if u is None else u[head_elems:].reshape(x3.shape)
+        x4 = padded[:head_elems].reshape(nb - 1, pack, rows_b, LANES)
+        if key is not None:
+            hkeys = jax.vmap(lambda b: bucket_key(key, b))(
+                jnp.arange(nb - 1))
+            u4 = jax.vmap(
+                lambda k: jax.random.uniform(k, (pack, rows_b, LANES),
+                                             jnp.float32))(hkeys)
+    x3 = padded[head_elems:head_elems + rt * granule].reshape(pack, rt,
+                                                              LANES)
+    u3 = (None if key is None else
+          jax.random.uniform(bucket_key(key, nb - 1), x3.shape,
+                             jnp.float32))
     return x4, u4, x3, u3, params, (pack, nb, rows_b, rt, t)
 
 
-@partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
-def qdq_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
-             bucket_elems: int = DEFAULT_BUCKET_ELEMS,
-             backend: str = "auto") -> jnp.ndarray:
+def _write_head_tail(head, tail, out_shape, dtype):
+    """Assemble the fused result by writing head + tail into ONE
+    preallocated output (dynamic_update_slice) instead of concatenating —
+    the copy that made the PR-2 flat path a measured compute regression.
+    head is None in the single-bucket regime (the tail IS the result)."""
+    if head is None:
+        return tail.astype(dtype)
+    out = jnp.zeros(out_shape, dtype)
+    out = lax.dynamic_update_slice(out, head.astype(dtype),
+                                   (0,) * len(out_shape))
+    off = (head.shape[0],) + (0,) * (len(out_shape) - 1)
+    return lax.dynamic_update_slice(out, tail.astype(dtype), off)
+
+
+def _qdq_flat_impl(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
+                   bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+                   backend: str = "auto") -> jnp.ndarray:
     """Fused per-bucket Q(x) over a flat buffer (whole pytree, one pass).
 
     Bit-identical to decode_flat(encode_flat(flat, key)) — same uniform
     draws, same per-bucket params, same rounding."""
     x4, u4, x3, u3, params, (pack, nb, _, rt, t) = _bucket_views(
-        flat, key, bits=bits, bucket_elems=bucket_elems)
-    parts = []
+        flat, key, bits=bits, bucket_elems=bucket_elems, backend=backend)
+    head = None
     if _use_pallas(backend):
         if nb > 1:
-            h = kernel.qdq_bucketed(
+            head = kernel.qdq_bucketed(
                 x4, u4, params[:nb - 1], bits=bits,
-                block_r=_block_r(LANES, 12 * pack), interpret=_interpret())
-            parts.append(h.reshape(-1))
+                block_r=_block_r(LANES, 12 * pack),
+                interpret=_interpret()).reshape(-1)
         tl = kernel.qdq(x3.reshape(pack * rt, LANES),
                         u3.reshape(pack * rt, LANES), params[nb - 1:nb],
                         bits=bits, block_r=_block_r(LANES, 3 * 4),
                         interpret=_interpret())
-        parts.append(tl.reshape(-1)[:t])
     else:
         if nb > 1:
-            h = ref.qdq_bucketed(x4, u4, params[:nb - 1, 0],
-                                 params[:nb - 1, 1], bits=bits)
-            parts.append(h.reshape(-1))
+            head = ref.qdq_bucketed(x4, u4, params[:nb - 1, 0],
+                                    params[:nb - 1, 1],
+                                    bits=bits).reshape(-1)
         lo, scale = params[nb - 1, 0], params[nb - 1, 1]
         tl = ref.decode(ref.encode(x3, u3, lo, scale, bits=bits), lo, scale)
-        parts.append(tl.reshape(-1)[:t])
-    return jnp.concatenate(parts).astype(flat.dtype)
+    return _write_head_tail(head, tl.reshape(-1)[:t], (flat.size,),
+                            flat.dtype)
+
+
+qdq_flat = jax.jit(_qdq_flat_impl,
+                   static_argnames=("bits", "bucket_elems", "backend"))
+
+# Donating variant: the flat buffer's storage is handed to XLA for reuse
+# as the (same shape/dtype) output. Safe ONLY when the caller's buffer is
+# dead after the call — e.g. a hop's decode+add temporary, or a freshly
+# flattened gradient; a no-op hint under an outer trace and on backends
+# without donation (CPU), real HBM savings at top level on TPU.
+qdq_flat_donated = jax.jit(_qdq_flat_impl,
+                           static_argnames=("bits", "bucket_elems",
+                                            "backend"),
+                           donate_argnums=(0,))
+
+
+def encode_flat_blocked(leaves, offsets, total: int, key, *, bits: int = 8,
+                        bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+    """Cache-blocked whole-tree encode: the zero-copy pipeline's hot path.
+
+    Instead of materializing the full flat buffer (flatten) and then
+    streaming it again for stats + uniforms + encode — several DRAM
+    round trips over the whole gradient — each bucket is assembled from
+    its (statically known) leaf fragments into ONE bucket-sized hot
+    buffer, and its (lo, scale), uniform draw, quantization, and packing
+    all happen while that block is cache-resident. Leaves are read once,
+    payload rows are written once; the only working buffer is one bucket.
+
+    Bit-identical to ``encode_flat(flatten(tree))``: stats are exact
+    min/max of the same elements, every bucket draws under
+    ``bucket_key(key, b)``, and the math is the same jnp reference. (The
+    Pallas tier keeps the full-buffer views — on TPU the bucketed grid
+    is already the blocking.)
+
+    ``leaves``/``offsets``/``total`` are the FlatLayout pieces (passed
+    raw to keep this module independent of repro.core).
+    """
+    pack, cap, nb, rows_b, rows_kept = flat_geometry(
+        total, bits=bits, bucket_elems=bucket_elems)
+    granule = pack * LANES
+    levels = (1 << bits) - 1
+    flats = [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves]
+    sizes = [f.shape[0] for f in flats]
+    payload = jnp.zeros((rows_kept, LANES), jnp.uint8)
+    params = jnp.zeros((nb, 2), jnp.float32)
+    row_off = 0
+    for b in range(nb):
+        start = b * cap
+        belems = min(cap, total - start)
+        buf = jnp.zeros((belems,), jnp.float32)
+        for off, sz, fl in zip(offsets, sizes, flats):
+            lo_e, hi_e = max(off, start), min(off + sz, start + belems)
+            if lo_e < hi_e:
+                buf = lax.dynamic_update_slice(
+                    buf, fl[lo_e - off:hi_e - off], (lo_e - start,))
+        lo = jnp.min(buf)
+        hi = jnp.max(buf)
+        scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+        rb = -(-belems // granule)
+        if rb * granule != belems:
+            buf = edge_pad(buf, rb * granule)
+        x3 = buf.reshape(pack, rb, LANES)
+        u = jax.random.uniform(bucket_key(key, b), x3.shape, jnp.float32)
+        rows = ref.encode_packed(x3, u, lo, scale, bits=bits)
+        payload = lax.dynamic_update_slice(payload, rows, (row_off, 0))
+        params = lax.dynamic_update_slice(params, lo.reshape(1, 1), (b, 0))
+        params = lax.dynamic_update_slice(params, scale.reshape(1, 1),
+                                          (b, 1))
+        row_off += rb
+    return payload, params
 
 
 @partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
@@ -273,28 +434,31 @@ def encode_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
 
     Returns (payload uint8 (rows_kept, 512), params fp32 (n_buckets, 2)).
     Wire bytes = payload.nbytes + params.nbytes: the ONE message the
-    fused exchanges ship per hop."""
-    x4, u4, x3, u3, params, (pack, nb, _, rt, t) = _bucket_views(
-        flat, key, bits=bits, bucket_elems=bucket_elems)
-    parts = []
+    fused exchanges ship per hop. Head and tail payload rows are written
+    into one preallocated output (no concatenate — asserted via jaxpr in
+    tests/test_flat_codec.py)."""
+    x4, u4, x3, u3, params, (pack, nb, rows_b, rt, t) = _bucket_views(
+        flat, key, bits=bits, bucket_elems=bucket_elems, backend=backend)
+    head = None
     if _use_pallas(backend):
         if nb > 1:
-            h = kernel.encode_packed_bucketed(
+            head = kernel.encode_packed_bucketed(
                 x4, u4, params[:nb - 1], bits=bits,
                 block_r=_block_r(LANES, 8 * pack + 1),
-                interpret=_interpret())
-            parts.append(h.reshape(-1, LANES))
-        parts.append(kernel.encode_packed(
+                interpret=_interpret()).reshape(-1, LANES)
+        tl = kernel.encode_packed(
             x3, u3, params[nb - 1:nb], bits=bits,
-            block_r=_block_r(LANES, 8 * pack + 1), interpret=_interpret()))
+            block_r=_block_r(LANES, 8 * pack + 1), interpret=_interpret())
     else:
         if nb > 1:
-            parts.append(ref.encode_packed_bucketed(
+            head = ref.encode_packed_bucketed(
                 x4, u4, params[:nb - 1, 0], params[:nb - 1, 1],
-                bits=bits).reshape(-1, LANES))
-        parts.append(ref.encode_packed(x3, u3, params[nb - 1, 0],
-                                       params[nb - 1, 1], bits=bits))
-    return jnp.concatenate(parts, axis=0), params
+                bits=bits).reshape(-1, LANES)
+        tl = ref.encode_packed(x3, u3, params[nb - 1, 0],
+                               params[nb - 1, 1], bits=bits)
+    rows_kept = (nb - 1) * rows_b + rt
+    payload = _write_head_tail(head, tl, (rows_kept, LANES), jnp.uint8)
+    return payload, params
 
 
 @partial(jax.jit, static_argnames=("bits", "total", "bucket_elems",
@@ -302,32 +466,33 @@ def encode_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
 def decode_flat(payload: jnp.ndarray, params: jnp.ndarray, *, total: int,
                 bits: int = 8, bucket_elems: int = DEFAULT_BUCKET_ELEMS,
                 backend: str = "auto") -> jnp.ndarray:
-    """Unpack + dequantize a bucketed wire payload back to (total,) fp32."""
+    """Unpack + dequantize a bucketed wire payload back to (total,) fp32.
+
+    Head and tail land in one preallocated output (single-buffer writes,
+    no concatenate), mirroring encode_flat."""
     pack, cap, nb, rows_b, rows_kept = flat_geometry(
         total, bits=bits, bucket_elems=bucket_elems)
-    granule = pack * LANES
     head_rows = (nb - 1) * rows_b
     t = total - (nb - 1) * cap
-    parts = []
+    head = None
     if _use_pallas(backend):
         if nb > 1:
-            h = kernel.decode_packed_bucketed(
+            head = kernel.decode_packed_bucketed(
                 payload[:head_rows].reshape(nb - 1, rows_b, LANES),
                 params[:nb - 1], bits=bits, out_dtype=jnp.float32,
-                block_r=_block_r(LANES, 1 + 4), interpret=_interpret())
-            parts.append(h.reshape(-1))
+                block_r=_block_r(LANES, 1 + 4),
+                interpret=_interpret()).reshape(-1)
         tl = kernel.decode_packed(
             payload[head_rows:], params[nb - 1:nb], bits=bits,
             out_dtype=jnp.float32, block_r=_block_r(LANES, 1 + 4),
             interpret=_interpret())
-        parts.append(tl.reshape(-1)[:t])
     else:
         if nb > 1:
-            h = ref.decode_packed_bucketed(
+            head = ref.decode_packed_bucketed(
                 payload[:head_rows].reshape(nb - 1, rows_b, LANES),
-                params[:nb - 1, 0], params[:nb - 1, 1], bits=bits)
-            parts.append(h.reshape(-1))
+                params[:nb - 1, 0], params[:nb - 1, 1],
+                bits=bits).reshape(-1)
         tl = ref.decode_packed(payload[head_rows:], params[nb - 1, 0],
                                params[nb - 1, 1], bits=bits)
-        parts.append(tl.reshape(-1)[:t])
-    return jnp.concatenate(parts)
+    return _write_head_tail(head, tl.reshape(-1)[:t], (total,),
+                            jnp.float32)

@@ -12,6 +12,7 @@ array: payload[r, c] = sum_k codes[k, r, c] << (k * b).
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
 
 
 def quant_params(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -94,6 +95,23 @@ def quantize_dequantize(x: jnp.ndarray, u: jnp.ndarray, *, bits: int) -> jnp.nda
 def _bcast(v: jnp.ndarray) -> jnp.ndarray:
     """(B,) per-bucket param -> broadcastable against (B, pack, Rb, C)."""
     return v[:, None, None, None]
+
+
+def minmax_bucketed(x2: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-bucket (lo, hi) of a (B, cap) view in ONE read of the buffer.
+
+    A variadic ``lax.reduce`` computes min and max in the same reduction
+    pass — one XLA Reduce over the data instead of the separate min pass
+    + max pass two ``jnp.min``/``jnp.max`` calls lower to. min/max are
+    exact ops, so the result is bit-identical to the two-pass version
+    regardless of reduction order.
+    """
+    x2 = x2.astype(jnp.float32)
+    return lax.reduce(
+        (x2, x2),
+        (jnp.float32(jnp.inf), jnp.float32(-jnp.inf)),
+        lambda a, b: (jnp.minimum(a[0], b[0]), jnp.maximum(a[1], b[1])),
+        (1,))
 
 
 def encode_packed_bucketed(x4: jnp.ndarray, u4: jnp.ndarray, lo, scale, *,

@@ -126,16 +126,19 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
         comm_bytes = 0.0
         if step_cfg.grad_compression != "none":
             qkey = jax.random.fold_in(state["rng"], state["step"])
-            # fused flat-buffer path: flatten once, quantize per bucket in
-            # one pass, ship ONE message
+            # fused flat-buffer path: flatten once (single-buffer writes,
+            # layout from the lru cache), quantize per bucket in one
+            # pass, ship ONE message
             layout = compression.FlatLayout.from_tree(grads)
             gflat = layout.flatten(grads)
             if step_cfg.error_feedback:
+                # v survives the qdq (residual needs it) -> no donation
                 v = gflat + state["ec_err"]
                 qflat = q_codec.flat_qdq(v, qkey)
                 new_state["ec_err"] = v - qflat
             else:
-                qflat = q_codec.flat_qdq(gflat, qkey)
+                # gflat is dead after the qdq -> donate its storage
+                qflat = q_codec.flat_qdq(gflat, qkey, donate=True)
             grads = layout.unflatten(qflat)
             # measured wire bytes of the one fused gradient message (a
             # trace-time constant: shapes are static under jit)

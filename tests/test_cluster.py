@@ -57,6 +57,43 @@ def test_async_scheduler_generalizes_eventsim_timeline():
         assert t == pytest.approx(rt, abs=1e-12)
 
 
+def test_sync_ring_allreduce_costing_matches_csgd_ring_makespan():
+    """ACCEPTANCE: ClusterSpec(allreduce='ring') costs the averaging
+    round as the partitioned ring — with zero compute the sync makespan
+    equals eventsim.csgd_ring_makespan exactly, and the per-wire ledger
+    records 2(N-1) messages SENT per worker per iteration."""
+    for n in (2, 4, 8):
+        spec = cluster.ClusterSpec(n_workers=n, t_compute=0.0, t_lat=LAT,
+                                   t_tr=TR, size_mb=1.0, allreduce="ring")
+        tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=1)
+        ref = eventsim.csgd_ring_makespan(n, 1.0, t_lat=LAT, t_tr=TR)
+        assert abs(tr.makespan - ref) < 1e-9
+        sent = {w: [m for m in tr.messages if m.src == w]
+                for w in range(n)}
+        for w in range(n):
+            assert len(sent[w]) == 2 * (n - 1)
+            assert sum(m.size for m in sent[w]) == \
+                pytest.approx(2 * 1.0 * (n - 1) / n)
+        assert tr.extra("allreduce") == "ring"
+    # with compute, the ring is gated on the slowest worker
+    spec = cluster.ClusterSpec(n_workers=4, t_compute=1.0,
+                               multipliers=(1.0, 1.0, 1.0, 3.0),
+                               t_lat=LAT, t_tr=TR, size_mb=1.0,
+                               allreduce="ring")
+    tr = cluster.make_protocol("sync_ps").schedule(spec, rounds=1)
+    assert tr.makespan == pytest.approx(
+        3.0 + eventsim.csgd_ring_makespan(4, 1.0, t_lat=LAT, t_tr=TR))
+    # local_sgd honors the same knob; unknown values are rejected
+    tr2 = cluster.make_protocol("local_sgd", period_h=2).schedule(
+        cluster.ClusterSpec(n_workers=4, t_compute=0.0, t_lat=LAT,
+                            t_tr=TR, size_mb=1.0, allreduce="ring"),
+        rounds=2)
+    assert tr2.extra("allreduce") == "ring"
+    with pytest.raises(ValueError):
+        cluster.make_protocol("sync_ps").schedule(
+            cluster.ClusterSpec(allreduce="mesh"), rounds=1)
+
+
 def test_trace_comm_ledger_consistent_with_deliveries():
     """Per-message records partition each delivery: k messages back to
     back, same span, sizes summing to the transfer."""

@@ -134,11 +134,16 @@ def test_csgd_ring_packed_equals_qdq_formulation():
 
 
 def test_exchanges_report_measured_bytes():
-    """message_bytes = bytes one worker sends per ITERATION (n-1 hops for
-    the ring, 2 neighbor sends for ring gossip)."""
+    """message_bytes = bytes one worker sends per ITERATION (2(n-1)
+    partition messages for the partitioned ring, n-1 full hops for the
+    monolithic chain, 2 neighbor sends for ring gossip)."""
     tree = jnp.zeros((10**4,), jnp.float32)
     rq4 = compression.codec("rq4")
     assert C.CSGDRingExchange(compressor="rq4").message_bytes(
+        tree, n_workers=8) == \
+        2 * 7 * rq4.tree_wire_bytes_partitioned(tree, 8)
+    assert C.CSGDRingExchange(compressor="rq4",
+                              partitioned=False).message_bytes(
         tree, n_workers=8) == 7 * rq4.tree_wire_bytes(tree)
     assert C.CSGDPSExchange(compressor="rq4").message_bytes(tree) == \
         2 * rq4.tree_wire_bytes(tree)

@@ -43,6 +43,38 @@ def test_multi_ps_equals_ring_allreduce():
                                                        t_tr=TR))
 
 
+def test_csgd_ring_makespan_partitioned_vs_monolithic():
+    """CSGDRingExchange's cost forms: partitioned = 2(N-1) rounds of
+    size/N chunks (== the generic partitioned ring AllReduce), monolithic
+    = N-1 full-size hops; per-worker wire bytes 2M(N-1)/N vs (N-1)M."""
+    n = 8
+    part = eventsim.csgd_ring_makespan(n, 1.0, t_lat=LAT, t_tr=TR)
+    mono = eventsim.csgd_ring_makespan(n, 1.0, t_lat=LAT, t_tr=TR,
+                                       partitioned=False)
+    assert part == pytest.approx(2 * (n - 1) * (LAT + TR / n))
+    assert part == pytest.approx(
+        eventsim.ring_allreduce_makespan(n, 1.0, t_lat=LAT, t_tr=TR))
+    assert mono == pytest.approx((n - 1) * (LAT + TR))
+    assert eventsim.ring_wire_mb_per_worker(n, 1.0) == \
+        pytest.approx(2 * (n - 1) / n)
+    assert eventsim.ring_wire_mb_per_worker(n, 1.0, partitioned=False) == \
+        pytest.approx(n - 1)
+
+
+def test_partitioned_ring_ledger_2n_minus_1_messages_per_worker():
+    """Acceptance: simulating one partitioned ring iteration records
+    exactly 2(N-1) wire messages SENT per worker in the per-wire ledger,
+    moving 2M(N-1)/N bytes per worker."""
+    n, size = 6, 12.0
+    res = eventsim.simulate(
+        eventsim.ring_allreduce_msgs(n, size), t_lat=LAT, t_tr=TR)
+    sent = {w: [m for m in res.messages if m.src == w] for w in range(n)}
+    for w in range(n):
+        assert len(sent[w]) == 2 * (n - 1)
+        assert sum(m.size for m in sent[w]) == \
+            pytest.approx(2 * size * (n - 1) / n)
+
+
 def test_decentralized_o1_latency():
     """§5.1: 2 t_lat + 2 t_tr independent of N."""
     for n in (4, 16, 256):
