@@ -1,18 +1,31 @@
-"""Bench-delta gate: diff fresh smoke benchmark numbers against the
-committed baseline and ANNOTATE (never fail) on regressions.
+"""Bench-delta gate: diff fresh smoke benchmark numbers against a
+committed baseline and ANNOTATE (never fail) on regressions — for EVERY
+benchmark family, not just the kernels.
 
-CI runs ``kernels_bench.py --smoke --out <fresh>`` and then
+CI runs each benchmark with ``--smoke`` and then
 
     python benchmarks/bench_delta.py --baseline BENCH_kernels_smoke.json \
-        --fresh <fresh> [--threshold 2.0]
+        --fresh BENCH_kernels.json [--threshold 2.0]
+    python benchmarks/bench_delta.py --baseline BENCH_comm_smoke.json \
+        --fresh BENCH_comm.json
+    python benchmarks/bench_delta.py --baseline BENCH_cluster_smoke.json \
+        --fresh BENCH_cluster.json
 
-Ops present in both files are compared on their steady-state ``us``; any
-fresh/baseline ratio above the threshold prints a GitHub Actions
-``::warning::`` annotation (CI machines vary in speed, so this warns
-rather than fails — the point is that the next flat-path-style compute
-regression is VISIBLE at PR time instead of landing silently, the way
-PR 2's 2.3x tree_encode_flat regression did). Exit code is always 0;
+Rows are matched on their identity fields (``op`` for the kernels file,
+``workload``/``protocol`` for the cluster file, ``n``/``regime``/``fig``
+for the comm file — whichever are present), and EVERY shared numeric
+metric is compared. Any fresh/baseline ratio above the threshold prints
+a GitHub Actions ``::warning::`` annotation (CI machines vary in speed,
+so this warns rather than fails — the point is that the next
+flat-path-style compute regression, or a silent 2x makespan/loss jump in
+the simulated families, is VISIBLE at PR time instead of landing
+silently, the way PR 2's 2.3x tree_encode_flat regression did). The
+comm/cluster numbers are deterministic closed forms, so for them any
+drift at all means the semantics changed. Exit code is always 0;
 ``--strict`` flips regressions to exit 1 for local use.
+
+``first_call_us`` is excluded: it is dominated by compile time, whose
+variance would drown the steady-state signal the gate exists for.
 """
 from __future__ import annotations
 
@@ -24,26 +37,55 @@ import sys
 REPO = os.path.join(os.path.dirname(__file__), os.pardir)
 DEFAULT_BASELINE = os.path.join(REPO, "BENCH_kernels_smoke.json")
 
+# identity fields, in display order; a row's key is whichever it carries
+KEY_FIELDS = ("op", "workload", "protocol", "fig", "n", "regime")
+EXCLUDED_METRICS = {"first_call_us"}
+# bigger-is-better metrics regress DOWNWARD (a 2x drop in a speedup or a
+# throughput is the regression; a 2x rise is an improvement)
+HIGHER_IS_BETTER = ("_speedup", "_per_s", "updates")
+
+
+def regression_ratio(name: str, base: float, fresh: float) -> float:
+    """>1 means worse: slowdown for time-like metrics, shrinkage for
+    bigger-is-better ones."""
+    if name.endswith(HIGHER_IS_BETTER):
+        return base / fresh if fresh > 0 else float("inf")
+    return fresh / base
+
+
+def row_key(row: dict) -> str:
+    return "/".join(str(row[k]) for k in KEY_FIELDS if k in row)
+
+
+def metrics(row: dict) -> dict:
+    """Every comparable numeric field of a row (identity fields and the
+    compile-time column excluded)."""
+    return {k: float(v) for k, v in row.items()
+            if k not in KEY_FIELDS and k not in EXCLUDED_METRICS
+            and isinstance(v, (int, float)) and not isinstance(v, bool)}
+
 
 def load(path: str) -> dict:
     with open(path) as f:
         rows = json.load(f)
-    return {r["op"]: r for r in rows}
+    return {row_key(r): r for r in rows if row_key(r)}
 
 
 def compare(baseline: dict, fresh: dict, threshold: float) -> list:
-    """[(op, base_us, fresh_us, ratio)] for every op above threshold."""
+    """[(key, metric, base, fresh, ratio)] for every shared metric whose
+    fresh/baseline ratio exceeds the threshold."""
     regressions = []
-    for op, row in fresh.items():
-        if op not in baseline:
+    for key, row in fresh.items():
+        if key not in baseline:
             continue
-        base_us = float(baseline[op]["us"])
-        fresh_us = float(row["us"])
-        if base_us <= 0:
-            continue
-        ratio = fresh_us / base_us
-        if ratio > threshold:
-            regressions.append((op, base_us, fresh_us, ratio))
+        base_m = metrics(baseline[key])
+        for name, fresh_v in metrics(row).items():
+            base_v = base_m.get(name)
+            if base_v is None or base_v <= 0:
+                continue
+            ratio = regression_ratio(name, base_v, fresh_v)
+            if ratio > threshold:
+                regressions.append((key, name, base_v, fresh_v, ratio))
     return regressions
 
 
@@ -64,17 +106,23 @@ def main() -> int:
     baseline = load(args.baseline)
     fresh = load(args.fresh)
     shared = sorted(set(baseline) & set(fresh))
-    print(f"# bench_delta: {len(shared)} shared ops "
+    print(f"# bench_delta: {os.path.basename(args.baseline)} vs "
+          f"{os.path.basename(args.fresh)} — {len(shared)} shared rows "
           f"(threshold {args.threshold:.1f}x)")
-    for op in shared:
-        b, f = float(baseline[op]["us"]), float(fresh[op]["us"])
-        ratio = f / b if b > 0 else float("inf")
-        print(f"{op:32s} base={b:10.0f}us fresh={f:10.0f}us "
-              f"ratio={ratio:5.2f}x")
+    for key in shared:
+        base_m = metrics(baseline[key])
+        both = [(m, base_m[m], v) for m, v in metrics(fresh[key]).items()
+                if base_m.get(m, 0) > 0]
+        if not both:
+            continue
+        # one line per row: its worst-moving metric
+        m, b, f = max(both, key=lambda t: regression_ratio(*t))
+        print(f"{key:40s} worst={m:20s} base={b:12.4f} fresh={f:12.4f} "
+              f"ratio={regression_ratio(m, b, f):5.2f}x")
     regressions = compare(baseline, fresh, args.threshold)
-    for op, b, f, ratio in regressions:
-        print(f"::warning::bench regression: {op} {ratio:.2f}x slower "
-              f"than baseline ({b:.0f}us -> {f:.0f}us)")
+    for key, m, b, f, ratio in regressions:
+        print(f"::warning::bench regression: {key}:{m} {ratio:.2f}x over "
+              f"baseline ({b:.4f} -> {f:.4f})")
     if not regressions:
         print("# no regressions above threshold")
     return 1 if (regressions and args.strict) else 0

@@ -1,6 +1,7 @@
 """Virtual-cluster benchmark: time-to-loss under a 4x straggler.
 
-Schedules sync-PS, async-PS, local-SGD(H), DSGD(ring) and LAQ on the same
+Schedules sync-PS, async-PS, local-SGD(H), DSGD(ring), DCD/ECD
+(compressed-delta gossip) and LAQ on the same
 8-worker cluster (one 4x straggler, §4.1's Figure 4.1/4.2 setup), replays
 every trace against REAL training (the §1.1.3 quadratic; ``--lm`` adds the
 reduced repro-100m LM) with the fused ``rq4`` codec, and reports each
@@ -16,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 
 from repro import cluster
@@ -45,6 +47,10 @@ def run_quadratic_sweep(*, rounds: int, lr: float = 0.1,
         cluster.make_protocol("local_sgd", period_h=8).schedule(
             spec, rounds=max(rounds // 8, 1)),
         cluster.make_protocol("dsgd").schedule(spec, rounds=rounds),
+        # compressed decentralized tier: same deg(W) gossip sends, each
+        # sized at the codec's measured delta wire bytes
+        cluster.make_protocol("dcd").schedule(spec, rounds=rounds),
+        cluster.make_protocol("ecd").schedule(spec, rounds=rounds),
         cluster.make_protocol("laq", skip=2).schedule(spec, rounds=rounds),
     ]
     results = [cluster.replay(t, wl, codec=codec, lr=lr,
@@ -53,6 +59,7 @@ def run_quadratic_sweep(*, rounds: int, lr: float = 0.1,
     target = results[0].final_loss   # sync's endpoint: who gets there first?
     rows = []
     for res in results:
+        t_hit = res.time_to(target)
         rows.append({
             "workload": "quadratic",
             "protocol": res.protocol,
@@ -61,7 +68,10 @@ def run_quadratic_sweep(*, rounds: int, lr: float = 0.1,
             "max_staleness": res.max_staleness,
             "wire_messages": res.n_wire_messages,
             "final_loss": round(res.final_loss, 5),
-            "t_to_sync_loss_s": round(res.time_to(target), 3),
+            # None (JSON null), not inf: the emitted file must stay
+            # strict RFC-8259 JSON for jq/CI artifact consumers
+            "t_to_sync_loss_s": round(t_hit, 3) if math.isfinite(t_hit)
+                                else None,
         })
     return rows
 
@@ -77,7 +87,10 @@ def run_lm_sweep(*, rounds: int, smoke: bool, lr: float = 0.05,
     rows = []
     for proto, kw, r in [("sync_ps", {}, rounds),
                          ("local_sgd", {"period_h": 2},
-                          max(rounds // 2, 1))]:
+                          max(rounds // 2, 1)),
+                         # the repro-100m LM under stragglers with
+                         # compressed (difference-quantized) gossip
+                         ("dcd", {}, rounds)]:
         tr = cluster.make_protocol(proto, **kw).schedule(spec, rounds=r)
         res = cluster.replay(tr, wl, codec=codec, lr=lr, eval_every=1)
         rows.append({
@@ -105,11 +118,12 @@ def main(smoke: bool = False, lm: bool = False,
           f"{'updates':>8s} {'stale':>6s} {'wire#':>7s} {'loss':>9s} "
           f"{'t@sync':>8s}")
     for r in rows:
+        t_hit = r.get("t_to_sync_loss_s")
         print(f"{r['workload']:16s} {r['protocol']:10s} "
               f"{r['makespan_s']:9.2f} {r['updates']:8d} "
               f"{r.get('max_staleness', 0):6d} {r['wire_messages']:7d} "
               f"{r['final_loss']:9.4f} "
-              f"{r.get('t_to_sync_loss_s', float('nan')):8.2f}")
+              f"{t_hit if t_hit is not None else float('nan'):8.2f}")
 
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=2)

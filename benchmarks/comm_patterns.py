@@ -45,8 +45,13 @@ def sweep(size_mb: float = 100.0, *, smoke: bool = False):
             dec_torus = eventsim.decentralized_makespan(
                 n, size_mb, t_lat=alpha, t_tr=beta,
                 w=mixing.torus_2d(*mixing.near_square_factors(n)))
+            # DCD-PSGD: same 2 ring-gossip messages, but each is the
+            # measured rq4 wire size of the quantized delta (~8x fewer
+            # bytes) — latency term unchanged, Figure 3.4/3.5 on §5.1
+            dcd = eventsim.decentralized_makespan(
+                n, size_mb, t_lat=alpha, t_tr=beta, codec="rq4")
             rows.append((n, regime, ps, ar, ar_nopart, csgd, csgd_mono,
-                         dec, dec_torus))
+                         dec, dec_torus, dcd))
     return rows
 
 
@@ -62,24 +67,46 @@ def async_vs_sync(n: int = 8):
     return sync, async_tput, max_stale
 
 
+def gossip_compression_row(size_mb: float = 100.0) -> dict:
+    """Measured per-neighbor gossip wire MB: fp32 DSGD vs the DCD rq4
+    compressed delta — the ≤1/4-of-fp32 acceptance number, reported in
+    BENCH_comm.json and asserted in tests/test_dcd.py."""
+    fp32 = eventsim.gossip_wire_mb_per_worker(size_mb, degree=2)
+    dcd = eventsim.gossip_wire_mb_per_worker(size_mb, degree=2,
+                                             codec="rq4")
+    return {"fig": "5.dcd", "gossip_fp32_mb": round(fp32, 4),
+            "gossip_dcd_rq4_mb": round(dcd, 4),
+            "dcd_wire_ratio": round(dcd / fp32, 4)}
+
+
 def main(smoke: bool = False, out_path: str = OUT_PATH):
     print("# Communication patterns under the Section 1.3 switch model "
           "(makespan, seconds; CSGD = partitioned compressed ring, "
-          "CSGD-mono = monolithic (n-1)-full-hop chain)")
+          "CSGD-mono = monolithic (n-1)-full-hop chain, DCD = ring "
+          "gossip shipping rq4 compressed deltas)")
     print(f"{'N':>4s} {'regime':>9s} {'PS':>10s} {'ringAR':>10s} "
           f"{'AR-nopart':>10s} {'CSGD(4x)':>10s} {'CSGD-mono':>10s} "
-          f"{'DSGD':>10s} {'DSGD-torus':>10s}")
+          f"{'DSGD':>10s} {'DSGD-torus':>10s} {'DCD(rq4)':>10s}")
     payload = []
-    for n, regime, ps, ar, nop, csgd, csgdm, dec, dect in sweep(smoke=smoke):
+    for (n, regime, ps, ar, nop, csgd, csgdm, dec, dect,
+         dcd) in sweep(smoke=smoke):
         print(f"{n:4d} {regime:>9s} {ps:10.3f} {ar:10.3f} {nop:10.3f} "
-              f"{csgd:10.3f} {csgdm:10.3f} {dec:10.3f} {dect:10.3f}")
+              f"{csgd:10.3f} {csgdm:10.3f} {dec:10.3f} {dect:10.3f} "
+              f"{dcd:10.3f}")
         payload.append({"n": n, "regime": regime, "ps": round(ps, 4),
                         "ring_ar": round(ar, 4),
                         "ar_nopart": round(nop, 4),
                         "csgd_rq8": round(csgd, 4),
                         "csgd_rq8_mono": round(csgdm, 4),
                         "dsgd_ring": round(dec, 4),
-                        "dsgd_torus": round(dect, 4)})
+                        "dsgd_torus": round(dect, 4),
+                        "dcd_rq4": round(dcd, 4)})
+    gossip = gossip_compression_row()
+    print(f"\n# DCD compressed gossip wire (per worker per mix, ring): "
+          f"fp32 {gossip['gossip_fp32_mb']:.2f} MB -> rq4 "
+          f"{gossip['gossip_dcd_rq4_mb']:.2f} MB "
+          f"({gossip['dcd_wire_ratio']:.3f}x)")
+    payload.append(gossip)
     sync, asyn, stale = async_vs_sync()
     print(f"\n# Figure 4.1/4.2 — sync vs async PS with one 4x straggler")
     print(f"sync updates/s {sync:.2f} | async updates/s {asyn:.2f} "

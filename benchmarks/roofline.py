@@ -134,6 +134,16 @@ def derive(rec: dict, *, grad_codec: Optional[str] = "rq8") -> dict:
             if reducible > 0 else 0.0
         out["t_collective_compressed_s"] = rest / ICI_BW + comp
         out["grad_codec"] = grad_codec
+        # what-if: replace the gradient sync entirely with DCD ring
+        # gossip — deg(W)=2 neighbors each receive ONE fused compressed
+        # delta of the reducible element count (wire measured, §5.1's
+        # O(1)-in-N message count: 2 ICI_LAT per step, not 2(n-1))
+        gossip_deg = 2
+        per_nbr = compressed_collective_s(reducible, grad_codec,
+                                          elem_bytes=2.0, n_messages=1) \
+            if reducible > 0 else 0.0
+        out["t_gossip_dcd_s"] = rest / ICI_BW + gossip_deg * per_nbr
+        out["gossip_degree"] = gossip_deg
     return out
 
 
@@ -157,15 +167,18 @@ def main():
           "(seconds/step; v5e constants; coll(rq8) = collective term under "
           "the measured rq8 packed wire format, shipped as a partitioned "
           "compressed ring AllReduce — 2(n-1) partition messages each "
-          "paying ICI_LAT; per-leaf messaging would pay L per hop instead)")
+          "paying ICI_LAT; per-leaf messaging would pay L per hop instead; "
+          "dcd-gossip = the sync replaced by deg(W)=2 compressed-delta "
+          "gossip sends, 2 ICI_LAT total)")
     print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
-          f"{'collect':>10s} {'coll(rq8)':>10s} {'dominant':>10s} "
-          f"{'useful':>7s}")
+          f"{'collect':>10s} {'coll(rq8)':>10s} {'dcd-gossip':>10s} "
+          f"{'dominant':>10s} {'useful':>7s}")
     for r in rows:
         print(f"{r['arch']:24s} {r['shape']:12s} "
               f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
               f"{r['t_collective_s']:10.4f} "
               f"{r.get('t_collective_compressed_s', 0.0):10.4f} "
+              f"{r.get('t_gossip_dcd_s', 0.0):10.4f} "
               f"{r['dominant']:>10s} {r['useful_ratio']:7.2f}")
     dom = {}
     for r in rows:

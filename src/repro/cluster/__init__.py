@@ -6,7 +6,7 @@ real async / local-SGD / decentralized training.
                 staleness, t_wall) per applied gradient plus the full
                 per-message wire ledger (cross-checks eventsim).
   protocols.py  registry of protocol objects (sync_ps / async_ps /
-                local_sgd / dsgd / laq), mirroring EXCHANGES.
+                local_sgd / dsgd / dcd / ecd / laq), mirroring EXCHANGES.
   execute.py    replays a Trace against real vmapped training (quadratic
                 or repro-100m LM) through the fused flat-codec gradient
                 path -> loss-vs-simulated-wall-clock curves.

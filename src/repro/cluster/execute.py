@@ -22,6 +22,12 @@ Replay semantics per protocol (dispatch on ``Trace.protocol``):
             then average at each sync event.
   dsgd      per-worker replicas take one local step per round, then mix
             X <- X W with the SAME matrix the scheduler costed.
+  dcd/ecd   difference-compressed DSGD: per-worker PUBLIC copies x̂ are
+            mixed (X̂ W), each worker broadcasts the fused-flat-quantized
+            delta of its half-step against x̂, and every copy advances by
+            the DECODED delta — the ``DCDGossipExchange`` semantics, with
+            the trace's own codec sizing the wire. ecd adds the flat
+            fp32 residual (error feedback) of ``ECDGossipExchange``.
   laq       the server keeps each worker's last uploaded (codec'd)
             gradient; only the trace's senders refresh theirs each round
             — the others are reused stale, the LAQ relaxation.
@@ -154,9 +160,14 @@ def replay(trace: Trace, workload: Workload, *, codec: str = "rq4",
     """Train `workload` exactly as `trace` dictates; see module docstring.
 
     ``eval_every`` thins the eval cadence (every k applied updates for
-    async, every k rounds otherwise). ``mixing_w`` overrides the dsgd
-    replay matrix (default: the matrix the trace was scheduled with —
-    dsgd traces carry W in their extras)."""
+    async, every k rounds otherwise). ``mixing_w`` overrides the
+    dsgd/dcd/ecd replay matrix (default: the matrix the trace was
+    scheduled with — decentralized traces carry W in their extras).
+    Note for dcd/ecd traces: the broadcast delta is compressed with the
+    TRACE's own codec (the one its wire ledger was sized with), not this
+    ``codec`` argument, which only shapes the gradient path of the other
+    protocols — keeping the replayed bits consistent with the charged
+    bytes."""
     cdc = compression.codec(codec)
     root = jax.random.PRNGKey(seed)
     n = trace.n_workers
@@ -171,7 +182,7 @@ def replay(trace: Trace, workload: Workload, *, codec: str = "rq4",
 
     replays = {"sync_ps": _replay_sync, "async_ps": _replay_async,
                "local_sgd": _replay_local_sgd, "dsgd": _replay_dsgd,
-               "laq": _replay_laq}
+               "dcd": _replay_dcd, "ecd": _replay_ecd, "laq": _replay_laq}
     if trace.protocol not in replays:
         raise KeyError(f"no replay for protocol '{trace.protocol}'")
     ts, losses = replays[trace.protocol](
@@ -292,6 +303,61 @@ def _replay_dsgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
             ts.append(t_sync[r])
             losses.append(float(workload.eval_loss(_mean0(params_w))))
     return ts, losses
+
+
+def _replay_compressed_decentralized(trace, workload, *, lr, eval_every, n,
+                                     wkey, mixing_w, ec):
+    """Shared DCD/ECD replay: stacked PUBLIC copies x̂_w advance by the
+    decoded quantized delta of each worker's half-step (gradients are NOT
+    compressed — only the broadcast delta is, exactly the
+    DCD/ECDGossipExchange wire), mixed with the trace's own W and sized
+    by the trace's own codec."""
+    rounds = trace.extra("rounds")
+    if mixing_w is None:
+        mixing_w = np.asarray(trace.extra("w"))
+    w_mat = jnp.asarray(np.asarray(mixing_w), jnp.float32)
+    cdc = compression.codec(trace.extra("codec"))   # guaranteed by scheduler
+    layout = compression.FlatLayout.from_tree(workload.params0)
+
+    @jax.jit
+    def round_step(xhat_w, err_w, r):
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        params_w = jax.vmap(layout.unflatten)(xhat_w)
+        g_w = jax.vmap(workload.grad_fn)(params_w, keys)
+        gflat_w = jax.vmap(layout.flatten)(g_w)
+        x_half = w_mat @ xhat_w - lr * gflat_w
+        v = x_half - xhat_w + (err_w if ec else 0.0)
+        q = jax.vmap(lambda x, k: cdc.flat_qdq(x, jax.random.fold_in(k, 7))
+                     )(v, keys)
+        return xhat_w + q, (v - q if ec else err_w)
+
+    xhat_w = jax.vmap(layout.flatten)(_stack(workload.params0, n))
+    err_w = jnp.zeros_like(xhat_w)
+    ts, losses = [], []
+    t_sync = _sync_times(trace)
+    for r in range(rounds):
+        xhat_w, err_w = round_step(xhat_w, err_w, r)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            ts.append(t_sync[r])
+            losses.append(float(workload.eval_loss(
+                layout.unflatten(xhat_w.mean(0)))))
+    return ts, losses
+
+
+def _replay_dcd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                mixing_w):
+    del qgrad   # DCD compresses the broadcast delta, not the gradient
+    return _replay_compressed_decentralized(
+        trace, workload, lr=lr, eval_every=eval_every, n=n, wkey=wkey,
+        mixing_w=mixing_w, ec=False)
+
+
+def _replay_ecd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
+                mixing_w):
+    del qgrad
+    return _replay_compressed_decentralized(
+        trace, workload, lr=lr, eval_every=eval_every, n=n, wkey=wkey,
+        mixing_w=mixing_w, ec=True)
 
 
 def _replay_laq(trace, workload, qgrad, *, lr, eval_every, n, wkey,

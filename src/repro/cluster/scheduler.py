@@ -28,7 +28,10 @@ Protocols (see ``repro.cluster.protocols`` for the registry objects):
   sync_ps        rounds of compute -> uplink -> gated broadcast (§1.3.2)
   async_ps       free-running pull/compute/push per worker (§4.1)
   local_sgd      H local steps between averaging rounds (§4/LocalSGD)
-  decentralized  gossip rounds over ANY mixing.py matrix W (§5.1)
+  decentralized  gossip rounds over ANY mixing.py matrix W (§5.1); with a
+                 codec, the deg(W) per-round sends are sized at the
+                 codec's measured wire bytes — the DCD/ECD compressed-
+                 delta gossip tier (protocols "dcd"/"ecd")
   laq            sync PS where each worker uploads every `skip`-th round
                  (round-robin lazy aggregation a la LAQ, arXiv 1909.07588;
                  the server reuses the stored gradient in between)
@@ -312,14 +315,29 @@ def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
 
 
 def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,
-                           w: Optional[np.ndarray] = None) -> Trace:
+                           w: Optional[np.ndarray] = None,
+                           codec: Optional[str] = None,
+                           protocol: str = "dsgd") -> Trace:
     """§5.1 DSGD gossip rounds over any mixing matrix W (default: the
     paper's ring W2): each round every worker takes one local step, then
     ships its FULL model to each W-neighbor (deg(W) sends, serialized at
-    its send port — O(1) in N for sparse W)."""
+    its send port — O(1) in N for sparse W).
+
+    ``codec`` switches the per-neighbor message from the fp32 model to
+    the codec's MEASURED wire bytes — the compressed-delta gossip of
+    ``DCDGossipExchange``/``ECDGossipExchange`` (the degree-many sends
+    per round are unchanged; only their size shrinks). ``protocol``
+    names the replay semantics (``"dcd"``/``"ecd"`` dispatch the
+    difference-compressed replays in ``execute.py``)."""
     from repro.core import mixing
 
-    n, s = spec.n_workers, spec.msg_mb()
+    if protocol != "dsgd" and codec is None:
+        # a compressed trace must carry the codec its ledger was sized
+        # with, or the replay would quantize what the ledger charged fp32
+        raise ValueError(f"protocol '{protocol}' needs codec=")
+    n = spec.n_workers
+    s = (eventsim._msg_mb(spec.size_mb, 1.0, codec) if codec is not None
+         else spec.msg_mb())
     w_mat = mixing.ring(n) if w is None else np.asarray(w)
     nbrs = [[j for j in range(n) if j != i and abs(w_mat[j, i]) > 1e-12]
             for i in range(n)]   # i sends to every j weighting x_i
@@ -340,12 +358,13 @@ def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,
         t = res.makespan
         events.append(TraceEvent("gossip", PS, r, r, r + 1, 0, t))
     # the trace carries W itself (nested tuple) so the replay mixes with
-    # exactly the matrix whose comm cost was charged here
+    # exactly the matrix whose comm cost was charged here; compressed
+    # protocols also carry the codec their messages were sized with
     w_rows = tuple(tuple(row) for row in w_mat.tolist())
-    return Trace("dsgd", n, _sorted_events(events), tuple(comm),
+    return Trace(protocol, n, _sorted_events(events), tuple(comm),
                  tuple(recs), t,
                  (("rounds", rounds), ("degree", mixing.degree(w_mat)),
-                  ("w", w_rows)))
+                  ("w", w_rows), ("codec", codec)))
 
 
 def schedule_laq(spec: ClusterSpec, *, rounds: int = 1,

@@ -12,6 +12,10 @@ compression randomness, per-worker error state, exact update rules.
   ECSGDExchange      Eqs. (3.8)-(3.12) DoubleSqueeze        two-sided EC
   DelayedExchange    Assumption 5 bounded staleness (tau)   wraps any exchange
   GossipMix          Eq. (5.2)  X <- (X - gamma G) W        ppermute ring / pmean
+  DCDGossipExchange  difference-compressed DSGD             compressed gossip
+                     (DCD-PSGD, Tang et al. 2018)           over any W
+  ECDGossipExchange  error-compensated DCD variant          + flat residual
+                     (ECD-PSGD-style, cf. DoubleSqueeze)    buffer
 
 Compression is obtained from the Codec registry (repro.core.compression).
 The compressed exchanges default to the **fused flat-buffer tier**
@@ -35,6 +39,7 @@ servers of their FSDP partition); see train/steps.py.
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import Any, Callable, Optional
 
 import jax
@@ -495,6 +500,36 @@ class DelayedExchange:
         return self.inner.message_bytes(tree, n_workers=n_workers)
 
 
+def _freeze_w(obj) -> None:
+    """Store a frozen dataclass's ``w`` matrix as a nested tuple (keeps
+    the exchange hashable/comparable — shared by GossipMix and DCD/ECD)."""
+    if obj.w is not None:
+        import numpy as np
+        w = np.asarray(obj.w, dtype=float)
+        object.__setattr__(obj, "w",
+                           tuple(tuple(row) for row in w.tolist()))
+
+
+def _resolve_matrix(w, topology: str, n: int):
+    """Explicit (n, n) gossip matrix for a (w, topology) spec: an
+    explicit ``w`` wins; otherwise the named ``mixing.py`` builder."""
+    import numpy as np
+
+    from repro.core import mixing
+    if w is not None:
+        w = np.asarray(w)
+        if w.shape != (n, n):
+            raise ValueError(f"W is {w.shape}, axis has {n} workers")
+        return w
+    if topology == "ring":
+        return mixing.ring(n)
+    if topology == "torus":
+        return mixing.torus_2d(*mixing.near_square_factors(n))
+    if topology == "full":
+        return mixing.fully_connected(n)
+    raise ValueError(f"unknown topology {topology}")
+
+
 @dataclasses.dataclass(frozen=True)
 class GossipMix:
     """Decentralized model mixing, Eq. (5.2): X_{t+1} = (X_t - gamma G_t) W.
@@ -520,29 +555,14 @@ class GossipMix:
                          # topology); stored as nested tuple, see __post_init__
 
     def __post_init__(self):
-        if self.w is not None:
-            import numpy as np
-            w = np.asarray(self.w, dtype=float)
-            # nested tuple: keeps the frozen dataclass hashable/comparable
-            object.__setattr__(self, "w",
-                               tuple(tuple(row) for row in w.tolist()))
+        _freeze_w(self)
 
     def _matrix(self, n: int):
         """The explicit W to lower for this axis size, or None for the
         ring/full ppermute fast paths."""
-        import numpy as np
-
-        from repro.core import mixing
-        if self.w is not None:
-            w = np.asarray(self.w)
-            if w.shape != (n, n):
-                raise ValueError(f"W is {w.shape}, axis has {n} workers")
-            return w
-        if self.topology == "torus":
-            return mixing.torus_2d(*mixing.near_square_factors(n))
-        if self.topology in ("ring", "full"):
+        if self.w is None and self.topology in ("ring", "full"):
             return None
-        raise ValueError(f"unknown topology {self.topology}")
+        return _resolve_matrix(self.w, self.topology, n)
 
     def __call__(self, params: PyTree, *, axis_name: str) -> PyTree:
         from repro.core import mixing
@@ -594,6 +614,183 @@ class GossipMix:
         return degree * _fp32_bytes(tree)
 
 
+@lru_cache(maxsize=64)
+def _birkhoff_terms_cached(w_rows: tuple):
+    """(c_identity, ((c_k, perm_k), ...)) of W's Birkhoff-von Neumann
+    decomposition (perm_k in lax.ppermute's (src, dst) convention), cached
+    on the nested-tuple matrix so traces don't re-peel the same W."""
+    import numpy as np
+
+    from repro.core import mixing
+
+    terms = mixing.birkhoff_decomposition(np.asarray(w_rows))
+    c_id = sum(c for c, perm in terms if not perm)
+    nonid = tuple((c, perm) for c, perm in terms if perm)
+    return float(c_id), nonid
+
+
+@dataclasses.dataclass(frozen=True)
+class DCDGossipExchange:
+    """Difference-compressed decentralized mixing: DCD-PSGD over any W.
+
+    The paper's culminating combination (Section 5 + *Decentralized
+    training with compressed communication*, Tang et al. 2018; cf.
+    Khirirat et al. 2018): every worker keeps its own *public copy*
+    ``x̂_i`` — the value every neighbor's replica of it holds — and per
+    iteration
+
+      1. ``x_i^{t+1/2} = sum_j W_ij x̂_j^t - gamma g_i``   (mix on replicas)
+      2. ``delta_i = x_i^{t+1/2} - x̂_i^t``                 (the difference)
+      3. broadcast ``Q(delta_i)`` through the fused flat Codec path —
+         ONE FlatPacked per neighbor, compressed bytes on the wire;
+      4. every holder (the worker itself included) applies the *decoded*
+         delta: ``x̂_i^{t+1} = x̂_i^t + decode(Q(delta_i))`` — so the
+         worker's model and all replicas of it stay BIT-IDENTICAL (the
+         replica-drift lemma; decode(encode(.)) == qdq(.) for packable
+         codecs), and the compression error enters through an
+         ever-shrinking delta instead of the full model.
+
+    The mixing runs over ANY doubly stochastic ``W`` via
+    ``mixing.birkhoff_decomposition``: one ``lax.ppermute`` of the packed
+    wire object per non-identity permutation term, so neighbors'
+    replicas are maintained per term (state ``nbr[k]`` tracks the
+    term-k source's public copy) and the model average
+    ``sum_j W_ij x̂_j`` is assembled from scalars c_k times replicas.
+    Wire cost: deg(W) compressed-delta messages per mix (the §5.1
+    serialization), vs GossipMix's deg(W) full fp32 models.
+
+    State (flat fp32 buffers over the whole model tree):
+      xhat: (total,)    this worker's public copy (== its model)
+      nbr:  (K, total)  decoded replica per non-identity Birkhoff term
+
+    Like ``GossipMix`` this is a model operator applied after the local
+    SGD step, but stateful: ``init_stacked(params_w)`` builds the
+    replica state OUTSIDE the mapped context (it needs the worker count
+    from the stacked leading axis), then ``__call__(params, state, key,
+    axis_name=...)`` runs per worker under vmap/shard_map.
+    """
+
+    compressor: str = "rq4"
+    topology: str = "ring"
+    w: Any = None
+    name: str = "dcd"
+    error_compensated = False        # class attr (ECD subclass flips it)
+
+    def __post_init__(self):
+        _freeze_w(self)
+
+    def _matrix(self, n: int):
+        """The explicit W for this axis size (unlike GossipMix there is
+        no matrix-free fast path — the replicas are keyed on W's
+        Birkhoff terms)."""
+        return _resolve_matrix(self.w, self.topology, n)
+
+    def birkhoff_terms(self, n: int):
+        """(c_identity, ((c_k, perm_k), ...)) — the ppermute lowering."""
+        w = self._matrix(n)
+        return _birkhoff_terms_cached(tuple(tuple(row) for row in
+                                            w.tolist()))
+
+    def degree(self, n: int) -> int:
+        from repro.core import mixing
+        return mixing.degree(self._matrix(n))
+
+    def init_stacked(self, params_w: PyTree) -> PyTree:
+        """Replica state from the (n_workers, ...) stacked params — call
+        OUTSIDE vmap (the worker count comes from the leading axis).
+        nbr[w, k] starts at the term-k source's flattened params, so the
+        replica invariant holds from step 0 even if workers start from
+        different models."""
+        import numpy as np
+
+        leaves = jax.tree_util.tree_leaves(params_w)
+        n = int(leaves[0].shape[0])
+        per_worker = jax.tree_util.tree_map(lambda p: p[0], params_w)
+        layout = compression.FlatLayout.from_tree(per_worker)
+        xhat = jax.vmap(layout.flatten)(params_w)            # (n, total)
+        _, terms = self.birkhoff_terms(n)
+        if terms:
+            idx = np.zeros((len(terms), n), dtype=int)       # idx[k, dst]=src
+            for k, (_, perm) in enumerate(terms):
+                for src, dst in perm:
+                    idx[k, dst] = src
+            nbr = jnp.swapaxes(xhat[jnp.asarray(idx)], 0, 1)  # (n, K, total)
+        else:
+            nbr = jnp.zeros((n, 0, layout.total), jnp.float32)
+        state = {"xhat": xhat, "nbr": nbr}
+        if self.error_compensated:
+            state["err"] = jnp.zeros((n, layout.total), jnp.float32)
+        return state
+
+    def __call__(self, params: PyTree, state: PyTree, key: jax.Array, *,
+                 axis_name: str) -> tuple[PyTree, PyTree]:
+        cdc = compression.codec(self.compressor)
+        n = _axis_size(axis_name)
+        layout = compression.FlatLayout.from_tree(params)
+        c_id, terms = self.birkhoff_terms(n)
+        xhat = state["xhat"]
+        # the call site hands us x̂_i - gamma g_i (model == public copy)
+        y = layout.flatten(params)
+        z = c_id * xhat                       # sum_j W_ij x̂_j from replicas
+        for k, (c, _) in enumerate(terms):
+            z = z + c * state["nbr"][k]
+        x_half = (y - xhat) + z               # = sum_j W_ij x̂_j - gamma g_i
+        v = x_half - xhat                     # the broadcast delta
+        if self.error_compensated:
+            v = v + state["err"]
+        wkey = _worker_key(key, axis_name)
+        if cdc.packable:
+            wire = cdc.flat_encode(v, wkey, layout)
+            q = cdc.flat_decode(wire)         # == flat_qdq(v, wkey) bits
+        else:
+            wire = q = cdc.flat_qdq(v, wkey)
+        new_xhat = xhat + q
+        nbr = state["nbr"]
+        for k, (_, perm) in enumerate(terms):
+            # the compressed wire object itself moves; receivers decode
+            # and apply — replicas advance on exactly the wire bytes
+            shifted = _tree_ppermute(wire, axis_name, list(perm))
+            dq = cdc.flat_decode(shifted) if cdc.packable else shifted
+            nbr = nbr.at[k].add(dq)
+        new_state = {"xhat": new_xhat, "nbr": nbr}
+        if self.error_compensated:
+            new_state["err"] = v - q
+        return layout.unflatten(new_xhat), new_state
+
+    def message_bytes(self, tree, *, n_workers: int = 3) -> float:
+        """deg(W) compressed-delta messages per mix: each neighbor gets
+        ONE fused flat message (payload + params header), vs GossipMix's
+        deg(W) full fp32 models."""
+        cdc = compression.codec(self.compressor)
+        return self.degree(n_workers) * cdc.tree_wire_bytes_flat(tree)
+
+    def n_wire_messages(self, n_workers: int) -> int:
+        """Wire messages one worker sends per mix (eventsim's per-message
+        latency accounting): one fused message per neighbor."""
+        return self.degree(n_workers)
+
+
+@dataclasses.dataclass(frozen=True)
+class ECDGossipExchange(DCDGossipExchange):
+    """Error-compensated compressed decentralized mixing (the ECD-PSGD
+    slot of Tang et al. 2018, realized in the DoubleSqueeze/EC form of
+    ``ECSGDExchange``): identical to DCD except the broadcast carries a
+    residual-corrected delta
+
+        v_i = (x_i^{t+1/2} - x̂_i) + e_i ;  ship Q(v_i) ;  e_i <- v_i - Q(v_i)
+
+    with ``e_i`` a SINGLE flat fp32 residual buffer over the whole model
+    (exactly the shape of ``ECSGDExchange(flat=True)``'s error state).
+    The feedback makes biased codecs usable — the default is the 1-bit
+    ``sign1`` operator, which plain DCD cannot survive — while the
+    replica invariant (model == public copy on every holder) is kept.
+    """
+
+    compressor: str = "sign1"
+    name: str = "ecd"
+    error_compensated = True
+
+
 EXCHANGES: dict[str, Callable[..., Any]] = {
     "mbsgd": MbSGDExchange,
     "csgd_ps": CSGDPSExchange,
@@ -604,6 +801,9 @@ EXCHANGES: dict[str, Callable[..., Any]] = {
     # registered so make_exchange("gossip", topology=...) works like every
     # other pattern instead of requiring a direct import
     "gossip": GossipMix,
+    # stateful compressed-gossip operators (replica state via init_stacked)
+    "dcd": DCDGossipExchange,
+    "ecd": ECDGossipExchange,
 }
 
 

@@ -21,6 +21,12 @@ paper states:
   K-times compression: divides every t_tr term by K, latency unchanged
                                                        (Figures 3.4/3.5)
 
+Compressed-delta gossip (the DCD/ECD tier): pass ``codec=`` to
+``decentralized_makespan`` / ``gossip_wire_mb_per_worker`` and each of
+the deg(W) per-mix messages is sized at the codec's measured wire bytes
+— message COUNT (and hence the t_lat term) is unchanged, exactly the
+Figure 3.4/3.5 story carried over to Section 5's pattern.
+
 Message sizes can be taken from the *measured* wire format instead of an
 abstract ratio: every pattern builder accepts ``codec='rq4'`` (a name from
 repro.core.compression's Codec registry) and then replaces `size` — read
@@ -333,6 +339,20 @@ def decentralized_makespan(n: int, size: float, *, t_lat: float, t_tr: float,
         degree = mixing.degree(w)
     return degree * (n_messages * t_lat
                      + _msg_mb(size, compression, codec) * t_tr)
+
+
+def gossip_wire_mb_per_worker(size: float, *, degree: int = 2, w=None,
+                              compression: float = 1.0,
+                              codec: Optional[str] = None) -> float:
+    """Wire MB ONE worker sends per gossip mix: deg(W) full-model
+    messages, each at the codec's MEASURED wire size when ``codec`` is
+    set — the DCD/ECD compressed-delta tier ships deg(W) quantized
+    deltas instead of deg(W) fp32 models (same message count, ~K-fold
+    fewer bytes; the decentralized analogue of ``ring_wire_mb_per_worker``)."""
+    if w is not None:
+        from repro.core import mixing   # lazy: keep eventsim numpy-free
+        degree = mixing.degree(w)
+    return degree * _msg_mb(size, compression, codec)
 
 
 def async_ps_timeline(n: int, *, t_compute: Sequence[float], t_lat: float,

@@ -60,35 +60,43 @@ def run_distributed(
     full_loss_fn / full_grad_fn: deterministic f and f' for metrics.
     sample_batch(key): draws one worker-minibatch (workers get split keys).
     exchange: gradient communicator (None + gossip => pure DSGD local step).
-    gossip: optional model-mixing operator applied after the SGD update.
+    gossip: optional model-mixing operator applied after the SGD update —
+        stateless (GossipMix: params -> params) or stateful (DCD/ECD:
+        exposes ``init_stacked(params_w)`` and threads replica state
+        through the scan like an exchange does).
     """
     exchange = exchange if exchange is not None else MbSGDExchange()
     params_w = _broadcast(params0, n_workers)
     ex_state_w = jax.vmap(exchange.init)(params_w)
+    stateful_gossip = gossip is not None and hasattr(gossip, "init_stacked")
+    g_state_w = gossip.init_stacked(params_w) if stateful_gossip else ()
     root = jax.random.PRNGKey(seed)
 
     grad_local = jax.grad(loss_fn)
 
     def scan_body(carry, t):
-        params_w, ex_state_w = carry
+        params_w, ex_state_w, g_state_w = carry
         step_key = jax.random.fold_in(root, t)
         keys = jax.random.split(step_key, n_workers)
         # exchanges consume the SAME base key on every worker for the shared
         # (server/broadcast) compression; worker-local keys come from fold_in
         # on axis_index inside the exchange. So pass the per-worker batch key
         # for sampling but the shared step_key for the exchange.
-        def one(params, ex_state, bkey):
+        def one(params, ex_state, g_state, bkey):
             batch = sample_batch(bkey)
             g = grad_local(params, batch)
             upd, ex_state = exchange(g, ex_state, step_key, axis_name=AXIS)
             new_params = jax.tree_util.tree_map(
                 lambda p, u: p - lr * u, params, upd)
-            if gossip is not None:
+            if stateful_gossip:
+                new_params, g_state = gossip(new_params, g_state, step_key,
+                                             axis_name=AXIS)
+            elif gossip is not None:
                 new_params = gossip(new_params, axis_name=AXIS)
-            return new_params, ex_state
+            return new_params, ex_state, g_state
 
-        params_w, ex_state_w = jax.vmap(one, axis_name=AXIS)(
-            params_w, ex_state_w, keys)
+        params_w, ex_state_w, g_state_w = jax.vmap(one, axis_name=AXIS)(
+            params_w, ex_state_w, g_state_w, keys)
         x_bar = jax.tree_util.tree_map(lambda p: p.mean(0), params_w)
         loss = full_loss_fn(x_bar)
         g_bar = full_grad_fn(x_bar)
@@ -96,10 +104,10 @@ def run_distributed(
         cons = sum(
             jnp.sum((p - p.mean(0, keepdims=True)) ** 2) / p.shape[0]
             for p in jax.tree_util.tree_leaves(params_w))
-        return (params_w, ex_state_w), (loss, gnorm, cons)
+        return (params_w, ex_state_w, g_state_w), (loss, gnorm, cons)
 
-    (params_w, _), (losses, gnorms, cons) = lax.scan(
-        scan_body, (params_w, ex_state_w), jnp.arange(steps))
+    (params_w, _, _), (losses, gnorms, cons) = lax.scan(
+        scan_body, (params_w, ex_state_w, g_state_w), jnp.arange(steps))
     comm = 0.0
     if hasattr(exchange, "message_bytes"):
         comm += float(exchange.message_bytes(params0, n_workers=n_workers))
@@ -177,23 +185,41 @@ class Quadratic:
         return sampler
 
 
+class LocalExchange:
+    """No gradient exchange: plain local SGD step (the D/DCD/ECD-SGD
+    gradient tier — all communication happens in the gossip operator)."""
+
+    name = "local"
+
+    def init(self, params):
+        return ()
+
+    def __call__(self, grad, state, key, *, axis_name):
+        return grad, state
+
+
 def run_quadratic(method: str, *, n_workers: int = 8, steps: int = 300,
                   lr: float = 0.1, batch: int = 4, seed: int = 0,
-                  heterogeneity: float = 0.0, exchange_kw: dict | None = None,
+                  d: int = 32, heterogeneity: float = 0.0,
+                  exchange_kw: dict | None = None,
                   gossip_topology: str | None = None,
                   gossip_w=None) -> RunResult:
     """One-call driver used by tests/benchmarks: method in
-    {gd, sgd, mbsgd, csgd_ps, csgd_ring, ecsgd, asgd, dsgd}.
+    {gd, sgd, mbsgd, csgd_ps, csgd_ring, ecsgd, asgd, dsgd, dcd, ecd}.
 
-    dsgd accepts ``gossip_topology`` in {'ring', 'torus', 'full'} or an
-    explicit doubly stochastic ``gossip_w`` matrix (any ``mixing.py``
-    matrix — lowered to ppermutes via the Birkhoff decomposition);
-    ``asgd`` accepts ``exchange_kw={'schedule': ...}`` to replay a
-    measured per-step staleness table from the cluster scheduler."""
+    dsgd/dcd/ecd accept ``gossip_topology`` in {'ring', 'torus', 'full'}
+    or an explicit doubly stochastic ``gossip_w`` matrix (any
+    ``mixing.py`` matrix — lowered to ppermutes via the Birkhoff
+    decomposition); dcd/ecd route their neighbor deltas through the
+    fused flat Codec path (``exchange_kw={'compressor': ...}`` picks the
+    codec). ``asgd`` accepts ``exchange_kw={'schedule': ...}`` to replay
+    a measured per-step staleness table from the cluster scheduler.
+    ``d`` sets the quadratic's dimension (wire-byte assertions want
+    trees big enough to amortize the packed format's lane padding)."""
     from repro.core import communicators as C
 
     key = jax.random.PRNGKey(seed)
-    prob = Quadratic.make(key, n_workers=n_workers,
+    prob = Quadratic.make(key, d=d, n_workers=n_workers,
                           heterogeneity=heterogeneity)
     x0 = jnp.zeros(prob.a.shape[1])
     exchange_kw = dict(exchange_kw or {})
@@ -219,20 +245,16 @@ def run_quadratic(method: str, *, n_workers: int = 8, steps: int = 300,
         exchange = C.DelayedExchange(inner=C.MbSGDExchange(), **exchange_kw)
         sampler = prob.make_sampler(batch)
     elif method == "dsgd":
-        exchange = C.MbSGDExchange()
-
-        class _Local:
-            """DSGD does NOT all-reduce gradients: local step + gossip."""
-            name = "local"
-
-            def init(self, params):
-                return ()
-
-            def __call__(self, grad, state, key, *, axis_name):
-                return grad, state
-
-        exchange = _Local()
+        # DSGD does NOT all-reduce gradients: local step + gossip
+        exchange = LocalExchange()
         gossip = GossipMix(topology=gossip_topology or "ring", w=gossip_w)
+        sampler = prob.make_sampler(batch, worker_partition=True,
+                                    n_workers=n_workers)
+    elif method in ("dcd", "ecd"):
+        exchange = LocalExchange()
+        cls = C.DCDGossipExchange if method == "dcd" else C.ECDGossipExchange
+        gossip = cls(topology=gossip_topology or "ring", w=gossip_w,
+                     **exchange_kw)
         sampler = prob.make_sampler(batch, worker_partition=True,
                                     n_workers=n_workers)
     else:

@@ -164,7 +164,7 @@ def test_laq_thins_the_uplink():
 
 def test_protocol_registry_mirrors_exchanges():
     assert set(cluster.PROTOCOLS) == {"sync_ps", "async_ps", "local_sgd",
-                                      "dsgd", "laq"}
+                                      "dsgd", "dcd", "ecd", "laq"}
     with pytest.raises(KeyError):
         cluster.make_protocol("nope")
     # protocol objects are frozen dataclasses with a name, like EXCHANGES

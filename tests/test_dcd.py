@@ -1,0 +1,281 @@
+"""Compressed decentralized tier: DCD/ECD-PSGD over arbitrary gossip
+matrices — replica/delta semantics, degree-correct wire accounting, the
+cluster protocol + replay, and the convergence-at-quarter-bytes
+acceptance claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.core import communicators as C
+from repro.core import compression, eventsim, mixing, parallel
+
+AXIS = "workers"
+
+
+def _tree(key, shapes):
+    keys = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+def _stack_tree(key, n, shapes):
+    """Per-worker DISTINCT params (the replica invariant must hold even
+    when workers start from different models)."""
+    return _tree(key, [(n,) + s for s in shapes])
+
+
+# ---------------------------------------------------------------------------
+# exchange semantics
+# ---------------------------------------------------------------------------
+
+
+def test_dcd_identity_codec_tracks_dsgd():
+    """With the identity codec the delta broadcast is lossless, so DCD is
+    plain D-PSGD (same Birkhoff lowering; fp accumulation order differs,
+    hence rtol instead of bit equality)."""
+    w = mixing.ring(8)
+    dsgd = parallel.run_quadratic("dsgd", n_workers=8, steps=60, lr=0.05,
+                                  gossip_w=w)
+    dcd = parallel.run_quadratic("dcd", n_workers=8, steps=60, lr=0.05,
+                                 gossip_w=w,
+                                 exchange_kw={"compressor": "none"})
+    np.testing.assert_allclose(np.asarray(dcd.losses),
+                               np.asarray(dsgd.losses), rtol=1e-3)
+
+
+def test_dcd_replica_invariant_bit_exact():
+    """The DCD replica-drift lemma: after every mix (i) each worker's
+    model IS its public copy, and (ii) the term-k replica every receiver
+    holds equals the sender's public copy BIT-EXACTLY — the decoded wire
+    delta advances all holders identically."""
+    n = 8
+    ex = C.DCDGossipExchange(compressor="rq4")
+    shapes = [(7,), (3, 5)]
+    params_w = _stack_tree(jax.random.PRNGKey(0), n, shapes)
+    state_w = ex.init_stacked(params_w)
+    layout = compression.FlatLayout.from_tree(
+        jax.tree_util.tree_map(lambda p: p[0], params_w))
+    _, terms = ex.birkhoff_terms(n)
+    assert terms, "ring W must have non-identity Birkhoff terms"
+
+    step = jax.vmap(
+        lambda p, s, k: ex(p, s, k, axis_name=AXIS),
+        axis_name=AXIS, in_axes=(0, 0, None))
+    for t in range(4):
+        params_w, state_w = step(params_w, state_w,
+                                 jax.random.PRNGKey(100 + t))
+        flat_w = jax.vmap(layout.flatten)(params_w)
+        # (i) model == public copy
+        np.testing.assert_array_equal(np.asarray(flat_w),
+                                      np.asarray(state_w["xhat"]))
+        # (ii) receiver's replica == sender's public copy, per term
+        for k, (_, perm) in enumerate(terms):
+            src_of = np.zeros(n, dtype=int)
+            for src, dst in perm:
+                src_of[dst] = src
+            np.testing.assert_array_equal(
+                np.asarray(state_w["nbr"][:, k]),
+                np.asarray(state_w["xhat"])[src_of])
+
+
+def test_ecd_residual_feedback_with_biased_codec():
+    """ECD carries a single flat fp32 residual (like ECSGD) so the biased
+    1-bit sign codec still trains; the residual state really is one flat
+    buffer per worker."""
+    ecd = parallel.run_quadratic("ecd", n_workers=8, steps=300, lr=0.1)
+    assert float(ecd.losses[-1]) < 0.25 * float(ecd.losses[0])
+    ex = C.ECDGossipExchange()
+    params_w = _stack_tree(jax.random.PRNGKey(1), 4, [(6,), (2, 3)])
+    state = ex.init_stacked(params_w)
+    assert state["err"].shape == (4, 6 + 2 * 3)
+
+
+def test_dcd_registry_entries():
+    assert isinstance(C.make_exchange("dcd"), C.DCDGossipExchange)
+    ecd = C.make_exchange("ecd", topology="torus")
+    assert isinstance(ecd, C.ECDGossipExchange)
+    assert ecd.error_compensated and ecd.compressor == "sign1"
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+
+
+def test_gossip_and_dcd_message_bytes_scale_with_degree():
+    """Per-mix sends scale with mixing.degree(W) for ring vs torus vs an
+    explicit dense W — fp32 models for GossipMix, measured fused-flat
+    compressed deltas for DCD."""
+    tree = {"a": jnp.zeros((4096,)), "b": jnp.zeros((33, 65))}
+    fp32 = compression.codec("none").tree_wire_bytes(tree)
+    flat4 = compression.codec("rq4").tree_wire_bytes_flat(tree)
+    dense = mixing.fully_connected(8)
+    cases = [({"topology": "ring"}, 16, 2),
+             ({"topology": "torus"}, 16, 4),
+             ({"w": dense}, 8, 7)]
+    for kw, n, deg in cases:
+        assert mixing.degree(C.DCDGossipExchange(**kw)._matrix(n)) == deg
+        assert C.GossipMix(**kw).message_bytes(tree, n_workers=n) \
+            == deg * fp32
+        dcd = C.DCDGossipExchange(**kw)
+        assert dcd.message_bytes(tree, n_workers=n) == deg * flat4
+        assert dcd.n_wire_messages(n) == deg
+    # compressed deltas are far below fp32 per neighbor
+    assert flat4 < fp32 / 4
+
+
+def test_eventsim_decentralized_costs_compressed_bytes():
+    """decentralized_makespan / gossip_wire_mb_per_worker with a codec:
+    message count (t_lat term) unchanged, transfer term at the measured
+    wire size."""
+    kw = dict(t_lat=1.0, t_tr=1.0)
+    full = eventsim.decentralized_makespan(8, 1.0, **kw)
+    comp = eventsim.decentralized_makespan(8, 1.0, codec="rq4", **kw)
+    wire = eventsim.wire_size_mb("rq4", int(1e6 / 4))
+    assert full == pytest.approx(2 * (1.0 + 1.0))
+    assert comp == pytest.approx(2 * (1.0 + wire))
+    # per-worker wire MB: degree many messages, codec-measured
+    w = mixing.torus_2d(4, 4)
+    assert eventsim.gossip_wire_mb_per_worker(1.0, w=w) \
+        == pytest.approx(4 * 1.0)
+    ratio = eventsim.gossip_wire_mb_per_worker(1.0, codec="rq4") \
+        / eventsim.gossip_wire_mb_per_worker(1.0)
+    assert ratio <= 0.25
+
+
+# ---------------------------------------------------------------------------
+# cluster protocol + replay
+# ---------------------------------------------------------------------------
+
+
+def _spec(**kw):
+    base = dict(n_workers=8, t_compute=1.0,
+                multipliers=cluster.straggler_multipliers(8, factor=4.0),
+                t_lat=1e-2, t_tr=2e-3, size_mb=1.0)
+    base.update(kw)
+    return cluster.ClusterSpec(**base)
+
+
+def test_dcd_protocol_ledger_compressed_and_degree_many():
+    """The scheduler ledger accounts compressed bytes AND degree-many
+    messages per iteration: dcd rounds ship deg(W) sends per worker (same
+    count as dsgd) at the codec's measured wire size (~8x fewer MB for
+    rq4)."""
+    rounds = 3
+    dsgd = cluster.make_protocol("dsgd").schedule(_spec(), rounds=rounds)
+    dcd = cluster.make_protocol("dcd").schedule(_spec(), rounds=rounds)
+    assert dcd.protocol == "dcd" and dcd.extra("codec") == "rq4"
+    deg = dcd.extra("degree")
+    assert deg == 2
+    for tr in (dsgd, dcd):
+        assert len(tr.comm) == deg * 8 * rounds
+    wire = eventsim.wire_size_mb("rq4", int(1e6 / 4))
+    assert all(d.size == pytest.approx(wire) for d in dcd.comm)
+    assert all(d.size == pytest.approx(1.0) for d in dsgd.comm)
+    total = lambda tr: sum(d.size for d in tr.comm)
+    assert total(dcd) <= total(dsgd) / 4
+    # the compressed rounds finish no later (same latency, fewer bytes)
+    assert dcd.makespan <= dsgd.makespan + 1e-9
+
+
+def test_ecd_protocol_uses_its_own_codec():
+    ecd = cluster.make_protocol("ecd").schedule(_spec(), rounds=2)
+    assert ecd.protocol == "ecd" and ecd.extra("codec") == "sign1"
+    wire = eventsim.wire_size_mb("sign1", int(1e6 / 4))
+    assert all(d.size == pytest.approx(wire) for d in ecd.comm)
+
+
+def test_dcd_replay_trains_quadratic_under_straggler():
+    """Trace-replayed DCD trains the quadratic: the replay mixes with the
+    trace's W, compresses only the broadcast delta with the trace's
+    codec, and lands in the same neighborhood as full-precision DSGD."""
+    wl = cluster.quadratic_workload(n_workers=8)
+    rounds = 40
+    dsgd_tr = cluster.make_protocol("dsgd").schedule(_spec(), rounds=rounds)
+    dcd_tr = cluster.make_protocol("dcd").schedule(_spec(), rounds=rounds)
+    ecd_tr = cluster.make_protocol("ecd").schedule(_spec(), rounds=rounds)
+    dsgd = cluster.replay(dsgd_tr, wl, lr=0.1, eval_every=5)
+    dcd = cluster.replay(dcd_tr, wl, lr=0.1, eval_every=5)
+    ecd = cluster.replay(ecd_tr, wl, lr=0.1, eval_every=5)
+    assert dcd.final_loss < dcd.losses[0]          # still descending
+    assert dcd.final_loss <= 1.1 * dsgd.final_loss
+    assert ecd.final_loss <= 1.25 * dsgd.final_loss
+    # simulated time axes exist and are monotone (loss-vs-wall-clock)
+    assert np.all(np.diff(dcd.t_wall) > 0)
+
+
+# ---------------------------------------------------------------------------
+# roofline + benchmark plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_dcd_gossip_entry():
+    """The what-if DCD gossip term: deg(W)=2 compressed-delta sends, each
+    ONE fused message -> 2 ICI_LAT total, wire measured."""
+    from benchmarks.roofline import (ICI_BW, ICI_LAT,
+                                     compressed_collective_s, derive)
+    rec = {"arch": "repro-100m", "shape": "train_4k", "n_devices": 256,
+           "dot_flops": 1e12, "flops_body_once": 1e12,
+           "bytes_accessed_body_once": 1e9,
+           "argument_size_in_bytes": 2**30, "temp_size_in_bytes": 2**30,
+           "collectives": {"total": 4e9,
+                           "collective_breakdown": {"all-reduce": 3e9}}}
+    out = derive(rec, grad_codec="rq4")
+    per_nbr = compressed_collective_s(3e9, "rq4", elem_bytes=2.0,
+                                      n_messages=1)
+    assert out["gossip_degree"] == 2
+    # deg(W)=2 sends, ONE fused message each -> 2 ICI_LAT total in the
+    # term (vs the ring what-if's 2(n-1)); the transfer is wire-measured
+    assert out["t_gossip_dcd_s"] == pytest.approx(1e9 / ICI_BW + 2 * per_nbr)
+    assert per_nbr == pytest.approx(
+        compression.codec("rq4").wire_bytes_for(int(3e9 / 2)) / ICI_BW
+        + ICI_LAT)
+
+
+def test_bench_delta_generalizes_to_all_families():
+    """bench_delta keys rows of every benchmark family and flags both
+    slowdown-style and throughput-drop regressions."""
+    from benchmarks.bench_delta import compare, row_key
+    assert row_key({"op": "quant_qdq_16K", "us": 1.0}) == "quant_qdq_16K"
+    assert row_key({"n": 4, "regime": "bw-bound", "ps": 1.0}) == "4/bw-bound"
+    assert row_key({"workload": "quadratic", "protocol": "dcd"}) \
+        == "quadratic/dcd"
+    base = {"q/dcd": {"workload": "q", "protocol": "dcd",
+                      "makespan_s": 10.0, "async_updates_per_s": 6.0,
+                      "first_call_us": 1.0}}
+    fresh = {"q/dcd": {"workload": "q", "protocol": "dcd",
+                       "makespan_s": 25.0, "async_updates_per_s": 2.0,
+                       "first_call_us": 100.0}}
+    regs = {(k, m): r for k, m, _, _, r in compare(base, fresh, 2.0)}
+    assert regs[("q/dcd", "makespan_s")] == pytest.approx(2.5)
+    # throughput metrics regress downward
+    assert regs[("q/dcd", "async_updates_per_s")] == pytest.approx(3.0)
+    # compile-time column is excluded by design
+    assert ("q/dcd", "first_call_us") not in regs
+
+
+# ---------------------------------------------------------------------------
+# acceptance
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_dcd_matches_sync_loss_at_quarter_bytes():
+    """ACCEPTANCE: DCD-PSGD (rq4 deltas, ring W) on the quadratic reaches
+    the synchronous full-precision loss within 5% at equal iteration
+    count, while its measured per-iteration gossip wire is <= 1/4 of
+    full-precision DSGD's fp32 bytes (d=1024 so the packed format's lane
+    granule amortizes — the same number BENCH_comm.json's 5.dcd row
+    reports)."""
+    steps, lr, d = 400, 0.2, 1024
+    dcd = parallel.run_quadratic("dcd", n_workers=8, steps=steps, lr=lr,
+                                 d=d)
+    sync = parallel.run_quadratic("mbsgd", n_workers=8, steps=steps, lr=lr,
+                                  d=d)
+    dsgd = parallel.run_quadratic("dsgd", n_workers=8, steps=steps, lr=lr,
+                                  d=d)
+    assert float(dcd.losses[-1]) <= 1.05 * float(sync.losses[-1])
+    assert float(dcd.losses[-1]) < 0.9 * float(dcd.losses[0])
+    # measured wire: deg(W)=2 compressed deltas vs deg(W)=2 fp32 models
+    assert dcd.comm_bytes_per_step <= dsgd.comm_bytes_per_step / 4
