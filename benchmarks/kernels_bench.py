@@ -3,15 +3,22 @@ the numbers that matter for the TPU target are the VMEM working sets and
 roofline estimates printed alongside).
 
 Emits machine-readable ``BENCH_kernels.json`` at the repo root —
-``[{"op": ..., "us": ..., "first_call_us": ..., "est": ...}, ...]`` — so
-every run extends the perf trajectory. ``us`` is STEADY STATE (post
-warm-up, best of k reps — what the hardware does once compiled);
-``first_call_us`` is the separate first-call time (compile + dispatch),
-reported apart so dispatch/interpret overhead cannot pollute the
-trajectory the way the 10 ms quant_qdq row once shadowed its 15 µs
+``[{"op": ..., "us": ..., "us_median": ..., "first_call_us": ...,
+"est": ...}, ...]`` — so every run extends the perf trajectory. ``us`` is
+STEADY STATE (post warm-up, best of k reps — what the hardware does once
+compiled); ``us_median`` is the median of the same reps (noise floor
+indicator); ``first_call_us`` is the separate first-call time (compile +
+dispatch), reported apart so dispatch/interpret overhead cannot pollute
+the trajectory the way the 10 ms quant_qdq row once shadowed its 15 µs
 roofline estimate. ``--smoke`` shrinks every shape to CI scale, where
 ``benchmarks/bench_delta.py`` diffs the numbers against the committed
-``BENCH_kernels_smoke.json`` baseline and annotates >2x regressions.
+``BENCH_kernels_smoke.json`` baseline and annotates regressions.
+
+``--op SUBSTR`` runs only the rows whose name contains SUBSTR (setup for
+unselected rows is never built, so iterating on one kernel doesn't re-run
+the 100m tree encodes); filtered runs print but do NOT write the JSON —
+a partial row list would clobber the committed trajectory. ``--repeat K``
+controls the steady-state rep count (default 3).
 
 The tree-encode rows compare the codec messaging tiers on the
 repro-100m gradient tree: per-leaf pays one dispatch + one (lo, scale)
@@ -19,13 +26,15 @@ reduction + one padded message per pytree leaf; the fused flat-buffer
 tier pays them once for the whole tree (its steady state must be no
 slower — ``flat_vs_perleaf_speedup`` >= 1 is the PR-2-regression
 acceptance bar); the partitioned row encodes the same buffer as the
-ring AllReduce's N per-partition messages.
+ring AllReduce's N per-partition messages (blocked from-leaves encode —
+must be no slower than the flat row).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import statistics
 import time
 
 import jax
@@ -41,18 +50,19 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 
 
 def _time(fn, *args, reps=3):
-    """(first_call_us, steady_us): first call = compile + dispatch, timed
-    alone; steady state = best-of-reps after the warm-up, each rep
-    block_until_ready'd so async dispatch cannot smear across reps."""
+    """(first_call_us, best_us, median_us): first call = compile +
+    dispatch, timed alone; steady state = best/median of `reps` after the
+    warm-up, each rep block_until_ready'd so async dispatch cannot smear
+    across reps."""
     t0 = time.perf_counter()
     jax.block_until_ready(fn(*args))
     first = (time.perf_counter() - t0) * 1e6
-    best = float("inf")
-    for _ in range(reps):
+    samples = []
+    for _ in range(max(1, reps)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        best = min(best, (time.perf_counter() - t0) * 1e6)
-    return first, best
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return first, min(samples), statistics.median(samples)
 
 
 def _grad_tree(smoke: bool):
@@ -73,84 +83,133 @@ def _grad_tree(smoke: bool):
     return jax.tree_util.tree_unflatten(treedef, vals)
 
 
-def main(smoke: bool = False, out_path: str = OUT_PATH):
+def main(smoke: bool = False, out_path: str = OUT_PATH,
+         op: str | None = None, repeat: int = 3):
     from repro.core import compression
 
     key = jax.random.PRNGKey(0)
-    rows = []
-
+    tag = "reduced" if smoke else "100m"
     n_q = 1 << 14 if smoke else 1 << 20
-    x = jax.random.normal(key, (n_q,))
-    us = _time(lambda a: q_ops.quantize_dequantize(a, key, bits=8), x)
-    # TPU estimate: pure-VPU 2 passes over 4B+4B read + 4B write / 819GB/s
-    est = (x.size * 12) / HBM_BW * 1e6
-    rows.append((f"quant_qdq_{n_q // 1024}K", us,
-                 f"tpu_mem_bound_est={est:.1f}us"))
-
     seq = 128 if smoke else 1024
-    q = jax.random.normal(key, (1, seq, 8, 128), jnp.float32)
-    k = jax.random.normal(key, (1, seq, 2, 128), jnp.float32)
-    v = jax.random.normal(key, (1, seq, 2, 128), jnp.float32)
-    us = _time(lambda a, b, c: fa_ops.flash_attention(a, b, c, causal=True),
-               q, k, v)
-    flops = 2 * 2 * seq * seq * 8 * 128  # qk + av
-    est = flops / PEAK_FLOPS_BF16 * 1e6
-    rows.append((f"flash_attn_{seq}", us, f"tpu_mxu_est={est:.1f}us"))
-
     t_wkv = 64 if smoke else 512
-    r = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
-    kk = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
-    vv = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
-    lw = -jnp.exp(jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.3 - 2.5)
-    u = jax.random.normal(key, (4, 64)) * 0.1
-    us = _time(lambda *a: wkv_ops.wkv6(*a)[0], r, kk, vv, lw, u)
-    rows.append((f"wkv6_{t_wkv}", us, "chunked-scan"))
+
+    # (name, runner) pairs; runner() -> (timing, derived). Setup lives
+    # INSIDE each runner so --op never builds what it doesn't time.
+    def run_qdq():
+        x = jax.random.normal(key, (n_q,))
+        us = _time(lambda a: q_ops.quantize_dequantize(a, key, bits=8), x,
+                   reps=repeat)
+        # TPU estimate: pure-VPU 2 passes over 4B+4B read + 4B write
+        est = (x.size * 12) / HBM_BW * 1e6
+        return us, f"tpu_mem_bound_est={est:.1f}us"
+
+    def run_flash():
+        q = jax.random.normal(key, (1, seq, 8, 128), jnp.float32)
+        k = jax.random.normal(key, (1, seq, 2, 128), jnp.float32)
+        v = jax.random.normal(key, (1, seq, 2, 128), jnp.float32)
+        us = _time(lambda a, b, c: fa_ops.flash_attention(a, b, c,
+                                                          causal=True),
+                   q, k, v, reps=repeat)
+        flops = 2 * 2 * seq * seq * 8 * 128  # qk + av
+        est = flops / PEAK_FLOPS_BF16 * 1e6
+        return us, f"tpu_mxu_est={est:.1f}us"
+
+    def run_wkv():
+        r = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
+        kk = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
+        vv = jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.5
+        lw = -jnp.exp(jax.random.normal(key, (1, t_wkv, 4, 64)) * 0.3
+                      - 2.5)
+        u = jax.random.normal(key, (4, 64)) * 0.1
+        us = _time(lambda *a: wkv_ops.wkv6(*a)[0], r, kk, vv, lw, u,
+                   reps=repeat)
+        return us, "chunked-scan"
 
     # codec messaging tiers on the repro-100m gradient tree: per-leaf
     # (L dispatches + L params reductions + L padded messages), fused
     # flat buffer (one of each), and the ring's partitioned encode
     # (n_workers per-partition messages over one backing buffer)
-    grads = _grad_tree(smoke)
-    n_leaves = len(jax.tree_util.tree_leaves(grads))
+    tree_cache = {}
+
+    def _tree_setup():
+        if not tree_cache:
+            tree_cache["grads"] = _grad_tree(smoke)
+            tree_cache["cdc"] = compression.codec("rq8")
+        return tree_cache["grads"], tree_cache["cdc"]
+
     n_workers = 8
-    cdc = compression.codec("rq8")
-    us_leaf = _time(lambda t: cdc.tree_encode(t, key), grads)
-    us_flat = _time(lambda t: cdc.tree_encode_flat(t, key), grads)
-    us_part = _time(lambda t: cdc.tree_encode_partitioned(t, key,
-                                                          n_workers),
-                    grads)
-    b_leaf = cdc.tree_wire_bytes(grads)
-    b_flat = cdc.tree_wire_bytes_flat(grads)
-    b_part = cdc.tree_wire_bytes_partitioned(grads, n_workers)
-    tag = "reduced" if smoke else "100m"
-    speedup = us_leaf[1] / us_flat[1]
-    rows.append((f"tree_encode_per_leaf_{tag}", us_leaf,
-                 f"wire_B={b_leaf:.0f},n_messages={n_leaves}"))
-    rows.append((f"tree_encode_flat_{tag}", us_flat,
-                 f"wire_B={b_flat:.0f},n_messages=1"))
-    rows.append((f"tree_encode_partitioned_{tag}", us_part,
-                 f"part_wire_B={b_part:.0f},n_parts={n_workers}"))
+
+    def run_leaf():
+        grads, cdc = _tree_setup()
+        n_leaves = len(jax.tree_util.tree_leaves(grads))
+        us = _time(lambda t: cdc.tree_encode(t, key), grads, reps=repeat)
+        b = cdc.tree_wire_bytes(grads)
+        return us, f"wire_B={b:.0f},n_messages={n_leaves}"
+
+    def run_flat():
+        grads, cdc = _tree_setup()
+        us = _time(lambda t: cdc.tree_encode_flat(t, key), grads,
+                   reps=repeat)
+        b = cdc.tree_wire_bytes_flat(grads)
+        return us, f"wire_B={b:.0f},n_messages=1"
+
+    def run_part():
+        grads, cdc = _tree_setup()
+        us = _time(lambda t: cdc.tree_encode_partitioned(t, key,
+                                                         n_workers),
+                   grads, reps=repeat)
+        b = cdc.tree_wire_bytes_partitioned(grads, n_workers)
+        return us, f"part_wire_B={b:.0f},n_parts={n_workers}"
+
+    specs = [(f"quant_qdq_{n_q // 1024}K", run_qdq),
+             (f"flash_attn_{seq}", run_flash),
+             (f"wkv6_{t_wkv}", run_wkv),
+             (f"tree_encode_per_leaf_{tag}", run_leaf),
+             (f"tree_encode_flat_{tag}", run_flat),
+             (f"tree_encode_partitioned_{tag}", run_part)]
+    if op:
+        specs = [s for s in specs if op in s[0]]
+        if not specs:
+            raise SystemExit(f"--op '{op}' matches no benchmark row")
+
+    rows = [(name, *runner()) for name, runner in specs]
+    by_name = {name: t for name, t, _ in rows}
 
     print("# Kernel microbenchmarks (CPU interpret mode — correctness "
-          "tier; us = steady state, first = compile + first dispatch)")
-    print(f"{'name':30s} {'us_steady':>10s} {'first_ms':>9s}  derived")
-    for name, (first, us), derived in rows:
-        print(f"{name:30s} {us:10.0f} {first / 1e3:9.0f}  {derived}")
-    print(f"# flat_vs_perleaf_speedup = {speedup:.2f}x (steady state; "
-          ">= 1 means the fused path is no slower than per-leaf)")
+          "tier; us = steady state best-of-k, first = compile + first "
+          "dispatch)")
+    print(f"{'name':30s} {'us_steady':>10s} {'us_median':>10s} "
+          f"{'first_ms':>9s}  derived")
+    for name, (first, us, med), derived in rows:
+        print(f"{name:30s} {us:10.0f} {med:10.0f} {first / 1e3:9.0f}  "
+              f"{derived}")
 
-    payload = []
-    for name, (first, us), derived in rows:
-        row = {"op": name, "us": round(us, 1),
-               "first_call_us": round(first, 1), "est": derived}
-        if name.startswith("tree_encode_flat"):
-            row["flat_vs_perleaf_speedup"] = round(speedup, 3)
-        payload.append(row)
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {os.path.normpath(out_path)}")
-    return ",".join(f"{n}={u:.0f}us" for n, (_, u), _ in rows)
+    speedup = None
+    leaf_t = by_name.get(f"tree_encode_per_leaf_{tag}")
+    flat_t = by_name.get(f"tree_encode_flat_{tag}")
+    if leaf_t and flat_t:
+        speedup = leaf_t[1] / flat_t[1]
+        print(f"# flat_vs_perleaf_speedup = {speedup:.2f}x (steady "
+              "state; >= 1 means the fused path is no slower than "
+              "per-leaf)")
+
+    if op:
+        print("# --op filter active: JSON not written (partial rows "
+              "would clobber the committed trajectory)")
+    else:
+        payload = []
+        for name, (first, us, med), derived in rows:
+            row = {"op": name, "us": round(us, 1),
+                   "us_median": round(med, 1),
+                   "first_call_us": round(first, 1), "est": derived}
+            if name.startswith("tree_encode_flat") and speedup:
+                row["flat_vs_perleaf_speedup"] = round(speedup, 3)
+            payload.append(row)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {os.path.normpath(out_path)}")
+    return ",".join(f"{n}={t[1]:.0f}us" for n, t, _ in rows)
 
 
 if __name__ == "__main__":
@@ -159,5 +218,12 @@ if __name__ == "__main__":
                     help="tiny shapes (CI-scale)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="where to write BENCH_kernels.json")
+    ap.add_argument("--op", default=None,
+                    help="run only rows whose name contains this "
+                         "substring (skips JSON write)")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="steady-state reps per row (best + median "
+                         "reported)")
     args = ap.parse_args()
-    main(smoke=args.smoke, out_path=args.out)
+    main(smoke=args.smoke, out_path=args.out, op=args.op,
+         repeat=args.repeat)

@@ -263,7 +263,10 @@ class CSGDRingExchange:
                                             keepdims=False)
 
         # --- reduce-scatter: hop h ships the partial sum of partition
-        # (i - h) mod N; decode-add-re-encode touches 1/N of the buffer.
+        # (i - h) mod N; the decode-add-re-encode runs as ONE fused
+        # dispatch over 1/N of the buffer (partitions are granule-aligned
+        # by construction, so the fused path always applies) —
+        # bit-identical to the decode; add; encode composition.
         pay, prm = cdc.encode_partition(local_slice(i), wkey)
 
         def rs_hop(h, carry):
@@ -271,10 +274,8 @@ class CSGDRingExchange:
             pay = lax.ppermute(pay, axis_name, perm)
             prm = lax.ppermute(prm, axis_name, perm)
             pidx = (i - h) % n
-            summed = cdc.decode_partition(
-                pay, prm, part_elems=part_elems) + local_slice(pidx)
-            return cdc.encode_partition(summed,
-                                        jax.random.fold_in(wkey, h))
+            return cdc.decode_add_encode_partition(
+                pay, prm, local_slice(pidx), jax.random.fold_in(wkey, h))
 
         pay, prm = lax.fori_loop(1, n, rs_hop, (pay, prm))
 

@@ -561,11 +561,23 @@ def _tree_encode_partitioned_fused(tree, key, *, layout: FlatLayout,
                                    n_parts: int, bits: int,
                                    bucket_elems: int, backend: str):
     """Flatten + partition + encode in ONE jitted program (an eager
-    flatten would copy the whole buffer once per leaf)."""
+    flatten would copy the whole buffer once per leaf).
+
+    jnp tier: cache-blocked from-leaves encode — the vmapped
+    flatten-then-encode pipeline turns the per-partition edge-pad and
+    head/tail dynamic_update_slice writes into full-buffer scatters,
+    which made the partitioned encode cost ~3x the flat encode.
+    Bit-identical to ``_encode_partitions`` (asserted in
+    tests/test_flat_codec.py)."""
     from repro.kernels.quant import ops
     part_elems, _, _ = ops.partition_geometry(layout.total, n_parts,
                                               bits=bits,
                                               bucket_elems=bucket_elems)
+    if backend == "jnp" or (backend == "auto"
+                            and jax.default_backend() != "tpu"):
+        return ops.encode_partitioned_blocked(
+            jax.tree_util.tree_leaves(tree), layout.offsets, layout.total,
+            key, n_parts=n_parts, bits=bits, bucket_elems=bucket_elems)
     return _encode_partitions(layout.flatten(tree), key, n_parts=n_parts,
                               part_elems=part_elems, bits=bits,
                               bucket_elems=bucket_elems, backend=backend)
@@ -684,6 +696,19 @@ class QuantCodec(Codec):
         return ops.decode_flat(payload, params, total=part_elems,
                                bits=self.bits, bucket_elems=bucket_elems,
                                backend=self.backend)
+
+    def decode_add_encode_partition(self, payload, params, local, key, *,
+                                    bucket_elems=DEFAULT_BUCKET_ELEMS):
+        """THE fused ring hop: decode the incoming partition message, add
+        the local fp32 slice, and re-encode under `key` in ONE dispatch
+        (single VMEM-resident pass on the Pallas backend) — bit-identical
+        to ``encode_partition(decode_partition(...) + local, key)``.
+        Returns the outgoing (payload, params) wire message."""
+        from repro.kernels.quant import ops
+        return ops.decode_add_encode_flat(payload, params, local, key,
+                                          bits=self.bits,
+                                          bucket_elems=bucket_elems,
+                                          backend=self.backend)
 
     def flat_encode_partitioned(self, flat, key, layout: FlatLayout, *,
                                 n_parts: int,

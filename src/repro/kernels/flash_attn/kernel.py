@@ -1,17 +1,35 @@
-"""Pallas TPU kernel: blockwise-softmax (flash) GQA attention.
+"""Pallas TPU kernel: blockwise-softmax (flash) GQA attention, skip-grid.
 
-TPU adaptation notes (DESIGN.md §4):
-  * grid = (B, Hq, nQ, nK) — the LAST axis is the reduction axis: TPU grids
-    execute sequentially, so the running max/denominator/accumulator live in
-    VMEM scratch carried across the k-block steps (revisiting pattern);
-  * BlockSpecs: q tile (1, 1, BQ, D), k/v tiles (1, 1, BK, D); the kv-head
-    index map folds GQA (kv_head = q_head // group) so no head replication
-    is materialized in HBM;
-  * BQ = BK = 128 keeps tiles MXU-aligned (128 lanes) and the working set
-    (q + k + v + acc + stats ~ 5 * 128 * D * 4B) far under VMEM;
-  * causal + sliding-window masking is computed from program ids; fully
-    masked k-blocks still execute (no early-exit on TPU grids) — skipping
-    them via a grid-shrink is a recorded §Perf candidate;
+TPU adaptation notes:
+  * the grid is (B, n_pairs) where n_pairs enumerates only the
+    (q-block, k-block) tiles that are NOT fully masked.  Causal, sliding
+    window and the valid-length tail are all *static* predicates, so the
+    surviving pairs are computed at trace time (`skip_grid`) and shipped to
+    the kernel as a scalar-prefetched int32 table; the BlockSpec index maps
+    read the table (PrefetchScalarGridSpec) to place each step.  Fully
+    masked k-blocks therefore never execute — they are absent from the
+    grid, not predicated out (the former §Perf candidate, now landed);
+  * pairs are ordered q-block-major, so the output block's revisits are
+    consecutive (a TPU requirement: an output block is flushed when the
+    block index changes) and the online-softmax scratch carries across the
+    k-steps of one q-block exactly as in the classic (…, nQ, nK) grid;
+  * the whole head axis is folded into the block (tiles are (1, Hq, BQ, D)
+    / (1, Hkv, BK, D)): with head-folding the per-step tile does GQA as a
+    single batched matmul over the Hkv groups, cutting grid steps by Hq×
+    — the dominant cost both for interpret mode (per-step dispatch) and
+    for small-batch TPU launches.  VMEM at the retuned BQ=256, BK=128,
+    D=128, Hq=8: q 1.0 MiB + k/v 0.125 MiB each + acc 1.0 MiB + logits
+    0.5 MiB ≈ 2.8 MiB, comfortably under the ~16 MiB budget;
+  * retuned tiles BQ=256, BK=128 (was 128x128): the taller q-tile
+    amortizes per-step overhead across the folded heads, while keeping
+    the k-tile at 128 holds the causal over-execution ratio at 1.25×
+    useful area (a square 256 tile has the same executed area but
+    measured ~2× slower per element on the seq-1K bench shape; 512x128
+    ties, 64-wide k-tiles lose to step overhead — swept {64..1024}_q ×
+    {64..256}_k);
+  * scale is fused into the q-tile load (one VPU multiply on the small q
+    tile) and softcap into the logits pass, so the online-softmax inner
+    loop needs no separate scaling sweep;
   * online softmax keeps fp32 stats; output cast back to q.dtype.
 """
 from __future__ import annotations
@@ -21,99 +39,156 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0**30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, block_q: int, block_k: int, causal: bool,
-                  window: int, softcap: float, n_k: int, s_valid: int):
-    qi = pl.program_id(2)
-    ki = pl.program_id(3)
+def skip_grid(s_pad: int, block_q: int, block_k: int, *, causal: bool,
+              window: int, s_valid: int) -> np.ndarray:
+    """Static (4, n_pairs) table of surviving (q-block, k-block) tiles.
 
-    @pl.when(ki == 0)
+    Row 0: q-block index, row 1: k-block index, row 2: 1 iff the pair is
+    the first k-step of its q-block (scratch init), row 3: 1 iff it is the
+    last (finalize + output flush).  Pairs are q-block-major so output
+    revisits are consecutive.  A pair is dropped iff every (q_pos, k_pos)
+    in its tile is masked:
+      * tail:   k_pos >= s_valid for the whole tile,
+      * causal: min k_pos > max q_pos,
+      * window: max k_pos <= min q_pos - window.
+    """
+    n_q = -(-s_pad // block_q)
+    n_k = -(-s_pad // block_k)
+    qi_l, ki_l, first_l, last_l = [], [], [], []
+    for qi in range(n_q):
+        q_lo, q_hi = qi * block_q, qi * block_q + block_q - 1
+        kis = []
+        for ki in range(n_k):
+            k_lo, k_hi = ki * block_k, ki * block_k + block_k - 1
+            if k_lo >= s_valid:
+                continue
+            if causal and k_lo > q_hi:
+                continue
+            if window > 0 and k_hi <= q_lo - window:
+                continue
+            kis.append(ki)
+        for j, ki in enumerate(kis):
+            qi_l.append(qi)
+            ki_l.append(ki)
+            first_l.append(1 if j == 0 else 0)
+            last_l.append(1 if j == len(kis) - 1 else 0)
+    return np.asarray([qi_l, ki_l, first_l, last_l], dtype=np.int32)
+
+
+def _flash_kernel(maps_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                  acc_scr, *, scale: float, block_q: int, block_k: int,
+                  causal: bool, window: int, softcap: float, s_valid: int,
+                  hq: int, hkv: int):
+    t = pl.program_id(1)
+    qi = maps_ref[0, t]
+    ki = maps_ref[1, t]
+    group = hq // hkv
+    gbq = group * block_q
+
+    @pl.when(maps_ref[2, t] == 1)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)           # (BQ, D)
-    k = k_ref[0, 0].astype(jnp.float32)           # (BK, D)
-    v = v_ref[0, 0].astype(jnp.float32)           # (BK, D)
+    # head-folded tiles; scale fused into the q load (one small multiply)
+    q = (q_ref[0].astype(jnp.float32) * scale).reshape(hkv, gbq, -1)
+    k = k_ref[0].astype(jnp.float32)               # (Hkv, BK, D)
+    v = v_ref[0].astype(jnp.float32)               # (Hkv, BK, D)
 
-    logits = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ()))) * scale    # (BQ, BK)
+    logits = jax.lax.dot_general(                  # (Hkv, gBQ, BK)
+        q, k, (((2,), (2,)), ((0,), (0,))))
     if softcap > 0:
-        logits = softcap * jnp.tanh(logits / softcap)
+        logits = softcap * jnp.tanh(logits * (1.0 / softcap))
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 0)
+    row = jax.lax.broadcasted_iota(jnp.int32, (gbq, block_k), 0)
+    q_pos = qi * block_q + jax.lax.rem(row, block_q)
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 1)
+                                                    (gbq, block_k), 1)
     mask = k_pos < s_valid                      # padded keys never attended
     if causal:
         mask &= k_pos <= q_pos
     if window > 0:
         mask &= k_pos > q_pos - window
-    logits = jnp.where(mask, logits, NEG_INF)
+    logits = jnp.where(mask[None], logits, NEG_INF)
 
-    m_prev = m_scr[...]                            # (BQ, 1)
-    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_prev = m_scr[...]                            # (Hkv, gBQ, 1)
+    m_cur = jnp.max(logits, axis=2, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
-    p = jnp.exp(logits - m_new)                    # (BQ, BK)
-    alpha = jnp.exp(m_prev - m_new)                # (BQ, 1)
-    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+    # the where guards the ALL-masked tile (m_new == NEG_INF -> exp(0) = 1
+    # for every masked lane); such tiles only execute with skip=False —
+    # elsewhere exp(NEG_INF - finite) is exactly 0, so this is a no-op
+    p = jnp.where(mask[None], jnp.exp(logits - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)                # (Hkv, gBQ, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=2, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))))        # (Hkv, gBQ, D)
     m_scr[...] = m_new
     l_scr[...] = l_new
 
-    @pl.when(ki == n_k - 1)
+    @pl.when(maps_ref[3, t] == 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        o_ref[0] = (acc_scr[...] / denom).reshape(
+            hq, block_q, -1).astype(o_ref.dtype)
 
 
 def flash_attention_bhsd(q, k, v, *, causal: bool, window: int,
                          softcap: float, block_q: int, block_k: int,
-                         s_valid: int, interpret: bool) -> jnp.ndarray:
+                         s_valid: int, skip: bool = True,
+                         interpret: bool) -> jnp.ndarray:
     """q: (B,Hq,S,D); k,v: (B,Hkv,S,D) — layout chosen in ops.py.
 
     s_valid: real (unpadded) sequence length; keys beyond it are masked.
+    skip=False builds the FULL pair table (predicates disabled at grid
+    construction, still applied in-kernel) — the non-skipping baseline.
     """
     b, hq, s, d = q.shape
     hkv = k.shape[1]
     group = hq // hkv
-    n_q = pl.cdiv(s, block_q)
-    n_k = pl.cdiv(s, block_k)
     scale = 1.0 / math.sqrt(d)
+
+    maps = (skip_grid(s, block_q, block_k, causal=causal, window=window,
+                      s_valid=s_valid) if skip else
+            skip_grid(s, block_q, block_k, causal=False, window=0,
+                      s_valid=s))
+    n_pairs = maps.shape[1]
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
-        causal=causal, window=window, softcap=softcap, n_k=n_k,
-        s_valid=s_valid)
+        causal=causal, window=window, softcap=softcap, s_valid=s_valid,
+        hq=hq, hkv=hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_pairs),
+        in_specs=[
+            pl.BlockSpec((1, hq, block_q, d),
+                         lambda b_, t, maps_: (b_, 0, maps_[0, t], 0)),
+            pl.BlockSpec((1, hkv, block_k, d),
+                         lambda b_, t, maps_: (b_, 0, maps_[1, t], 0)),
+            pl.BlockSpec((1, hkv, block_k, d),
+                         lambda b_, t, maps_: (b_, 0, maps_[1, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, block_q, d),
+                               lambda b_, t, maps_: (b_, 0, maps_[0, t], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, group * block_q, 1), jnp.float32),  # max m
+            pltpu.VMEM((hkv, group * block_q, 1), jnp.float32),  # denom l
+            pltpu.VMEM((hkv, group * block_q, d), jnp.float32),  # acc
+        ],
+    )
 
     return pl.pallas_call(
         kernel,
-        grid=(b, hq, n_q, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d),
-                         lambda b_, h, qi, ki: (b_, h, qi, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b_, h, qi, ki, group=group:
-                         (b_, h // group, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b_, h, qi, ki, group=group:
-                         (b_, h // group, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, block_q, d),
-                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
-            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
-        ],
         interpret=interpret,
-    )(q, k, v)
+    )(jnp.asarray(maps), q, k, v)

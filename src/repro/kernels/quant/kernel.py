@@ -32,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _quantize(x, u, lo, scale, levels: int):
@@ -144,10 +145,13 @@ def decode_packed(payload: jnp.ndarray, params: jnp.ndarray, *, bits: int,
 
 
 def _qdq_bucketed_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
-    """x_ref, u_ref, o_ref: (1, pack, BLOCK_R, C); params_ref: (1, 2) is
-    this bucket's [lo, scale] row."""
-    lo = params_ref[0, 0]
-    scale = params_ref[0, 1]
+    """x_ref, u_ref, o_ref: (1, pack, BLOCK_R, C); params_ref is the FULL
+    (n_buckets, 2) params array, hoisted into VMEM once for the whole grid
+    (constant index map — no per-step refetch of the (lo, scale) row; the
+    kernel picks its bucket's row by program id)."""
+    bi = pl.program_id(0)
+    lo = params_ref[bi, 0]
+    scale = params_ref[bi, 1]
     q = _quantize(x_ref[...], u_ref[...], lo, scale, levels)
     o_ref[...] = (q * scale + lo).astype(o_ref.dtype)
 
@@ -155,11 +159,13 @@ def _qdq_bucketed_kernel(params_ref, x_ref, u_ref, o_ref, *, levels: int):
 def _encode_packed_bucketed_kernel(params_ref, x_ref, u_ref, o_ref, *,
                                    bits: int):
     """x_ref, u_ref: (1, pack, BLOCK_R, C) — one bucket's row tile, all
-    segments; o_ref: (1, BLOCK_R, C) packed payload tile."""
+    segments; o_ref: (1, BLOCK_R, C) packed payload tile; params_ref: the
+    full hoisted (n_buckets, 2) array (see _qdq_bucketed_kernel)."""
     pack = 8 // bits
     levels = (1 << bits) - 1
-    lo = params_ref[0, 0]
-    scale = params_ref[0, 1]
+    bi = pl.program_id(0)
+    lo = params_ref[bi, 0]
+    scale = params_ref[bi, 1]
     acc = None
     for k in range(pack):
         q = _quantize(x_ref[0, k], u_ref[0, k], lo, scale, levels)
@@ -170,8 +176,9 @@ def _encode_packed_bucketed_kernel(params_ref, x_ref, u_ref, o_ref, *,
 
 def _decode_packed_bucketed_kernel(params_ref, c_ref, o_ref, *, bits: int):
     k = pl.program_id(0)
-    lo = params_ref[0, 0]
-    scale = params_ref[0, 1]
+    bi = pl.program_id(1)
+    lo = params_ref[bi, 0]
+    scale = params_ref[bi, 1]
     mask = (1 << bits) - 1
     field = (c_ref[0].astype(jnp.int32) >> (k * bits)) & mask
     o_ref[0, 0] = (field.astype(jnp.float32) * scale + lo).astype(o_ref.dtype)
@@ -186,7 +193,7 @@ def qdq_bucketed(x4: jnp.ndarray, u4: jnp.ndarray, params: jnp.ndarray, *,
     return pl.pallas_call(
         kernel,
         grid=(b, pl.cdiv(r, block_r)),
-        in_specs=[pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)), seg, seg],
+        in_specs=[pl.BlockSpec((b, 2), lambda bi, i: (0, 0)), seg, seg],
         out_specs=seg,
         out_shape=jax.ShapeDtypeStruct((b, pack, r, c), x4.dtype),
         interpret=interpret,
@@ -204,7 +211,7 @@ def encode_packed_bucketed(x4: jnp.ndarray, u4: jnp.ndarray,
     return pl.pallas_call(
         kernel,
         grid=(b, pl.cdiv(r, block_r)),
-        in_specs=[pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)), seg, seg],
+        in_specs=[pl.BlockSpec((b, 2), lambda bi, i: (0, 0)), seg, seg],
         out_specs=pl.BlockSpec((1, block_r, c), lambda bi, i: (bi, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, r, c), jnp.uint8),
         interpret=interpret,
@@ -257,6 +264,133 @@ def minmax_bucketed(x3: jnp.ndarray, *, block_r: int,
     )(x3)
 
 
+# ---------------------------------------------------------------------------
+# Fused ring hop: decode + add + re-encode in ONE kernel. A reduce-scatter
+# hop's work on a partition used to be three dispatches with two full fp32
+# temporaries between them (the decoded message, then the sum); here the
+# grid runs TWO phases over each bucket — steps [0, n_tiles) decode the
+# payload tile, add the local tile, and min/max-accumulate the new bucket
+# range into a (1, 2) VMEM scratch; steps [n_tiles, 2*n_tiles) recompute
+# the same decode+add (recompute beats materializing: the fp32 sum never
+# exists outside VMEM) and quantize/bit-pack it with the scratch-held
+# (lo, scale). The params output is written at the last stats step; the
+# payload output's index map parks all stats steps on block 0, so every
+# output block's revisits stay consecutive (TPU flush rule) and its final
+# visit is the encode step that writes it. Bit-identical to the sequential
+# decode -> add -> minmax -> encode chain: same decoded values, same adds,
+# exact min/max, same _quantize math, same (externally drawn) uniforms.
+# ---------------------------------------------------------------------------
+
+
+def _decode_add_encode_bucketed_kernel(params_ref, pay_ref, x_ref, u_ref,
+                                       out_ref, pout_ref, mm_scr, *,
+                                       bits: int, n_tiles: int, n_rows: int,
+                                       block_r: int):
+    """params_ref: full hoisted (B, 2) [lo, scale] of the INCOMING message;
+    pay_ref: (1, BLOCK_R, C) incoming payload tile; x_ref, u_ref: (1, pack,
+    BLOCK_R, C) local-addend / uniform tiles; out_ref: (1, BLOCK_R, C)
+    re-encoded payload tile; pout_ref: (1, 2) this bucket's new params;
+    mm_scr: (1, 2) VMEM carry — [lo, hi] during stats, [lo, scale] after."""
+    bi = pl.program_id(0)
+    i = pl.program_id(1)
+    pack = 8 // bits
+    levels = (1 << bits) - 1
+    lo_in = params_ref[bi, 0]
+    scale_in = params_ref[bi, 1]
+
+    # decode + add — needed by both phases (recompute, never materialized)
+    codes = pay_ref[0].astype(jnp.int32)
+    summed = [
+        ((codes >> (k * bits)) & levels).astype(jnp.float32) * scale_in
+        + lo_in + x_ref[0, k].astype(jnp.float32)
+        for k in range(pack)
+    ]
+
+    @pl.when(i == 0)
+    def _init():
+        mm_scr[0, 0] = jnp.float32(jnp.inf)
+        mm_scr[0, 1] = jnp.float32(-jnp.inf)
+
+    @pl.when(i < n_tiles)
+    def _stats():
+        # rows past n_rows are grid padding of the last tile — masked out
+        row = (jax.lax.rem(i, n_tiles) * block_r
+               + jax.lax.broadcasted_iota(jnp.int32, summed[0].shape, 0))
+        valid = row < n_rows
+        lo_t = jnp.float32(jnp.inf)
+        hi_t = jnp.float32(-jnp.inf)
+        for s in summed:
+            lo_t = jnp.minimum(lo_t, jnp.min(jnp.where(valid, s, jnp.inf)))
+            hi_t = jnp.maximum(hi_t, jnp.max(jnp.where(valid, s, -jnp.inf)))
+        mm_scr[0, 0] = jnp.minimum(mm_scr[0, 0], lo_t)
+        mm_scr[0, 1] = jnp.maximum(mm_scr[0, 1], hi_t)
+
+    @pl.when(i == n_tiles - 1)
+    def _finalize_params():
+        lo = mm_scr[0, 0]
+        hi = mm_scr[0, 1]
+        scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+        pout_ref[0, 0] = lo
+        pout_ref[0, 1] = scale
+        mm_scr[0, 1] = scale          # phase 2 reads [lo, scale]
+
+    @pl.when(i >= n_tiles)
+    def _encode():
+        lo = mm_scr[0, 0]
+        scale = mm_scr[0, 1]
+        acc = None
+        for k in range(pack):
+            q = _quantize(summed[k], u_ref[0, k], lo, scale, levels)
+            q = q.astype(jnp.int32) << (k * bits)
+            acc = q if acc is None else acc | q
+        out_ref[0] = acc.astype(jnp.uint8)
+
+
+def decode_add_encode_bucketed(payload: jnp.ndarray, params: jnp.ndarray,
+                               x4: jnp.ndarray, u4: jnp.ndarray, *,
+                               bits: int, block_r: int, interpret: bool):
+    """Fused per-bucket ring hop. payload: (B, Rb, C) uint8 incoming;
+    params: (B, 2) its [lo, scale] rows; x4: (B, pack, Rb, C) fp32 local
+    addend segments; u4: matching uniforms for the re-encode. Returns
+    (payload_out (B, Rb, C) uint8, params_out (B, 2) fp32)."""
+    b, r, c = payload.shape
+    _, pack, _, _ = x4.shape
+    assert pack == 8 // bits, (x4.shape, bits)
+    n_tiles = pl.cdiv(r, block_r)
+    kernel = functools.partial(
+        _decode_add_encode_bucketed_kernel, bits=bits, n_tiles=n_tiles,
+        n_rows=r, block_r=block_r)
+    seg = pl.BlockSpec((1, pack, block_r, c),
+                       lambda bi, i, nt=n_tiles:
+                       (bi, 0, jax.lax.rem(i, nt), 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, 2 * n_tiles),
+        in_specs=[
+            pl.BlockSpec((b, 2), lambda bi, i: (0, 0)),   # hoisted params
+            pl.BlockSpec((1, block_r, c),
+                         lambda bi, i, nt=n_tiles:
+                         (bi, jax.lax.rem(i, nt), 0)),
+            seg,
+            seg,
+        ],
+        out_specs=[
+            # stats steps park on block 0 so revisits stay consecutive;
+            # its last visit (the first encode step) writes it
+            pl.BlockSpec((1, block_r, c),
+                         lambda bi, i, nt=n_tiles:
+                         (bi, jnp.where(i < nt, 0, i - nt), 0)),
+            pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r, c), jnp.uint8),
+            jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
+        interpret=interpret,
+    )(params, payload, x4, u4)
+
+
 def decode_packed_bucketed(payload: jnp.ndarray, params: jnp.ndarray, *,
                            bits: int, out_dtype, block_r: int,
                            interpret: bool) -> jnp.ndarray:
@@ -268,7 +402,7 @@ def decode_packed_bucketed(payload: jnp.ndarray, params: jnp.ndarray, *,
         kernel,
         grid=(pack, b, pl.cdiv(r, block_r)),
         in_specs=[
-            pl.BlockSpec((1, 2), lambda k, bi, i: (bi, 0)),
+            pl.BlockSpec((b, 2), lambda k, bi, i: (0, 0)),
             pl.BlockSpec((1, block_r, c), lambda k, bi, i: (bi, i, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_r, c),

@@ -97,8 +97,10 @@ def quantize_dequantize(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
                          block_r=_block_r(x2d.shape[1], 3 * 4),
                          interpret=_interpret())
     else:
-        lo, scale = params[0, 0], params[0, 1]
-        out = ref.decode(ref.encode(x2d, u, lo, scale, bits=bits), lo, scale)
+        # direct qdq: skips the encode -> uint8 -> decode round trip (a
+        # lossless detour — bit-identical, see ref.qdq) so XLA fuses the
+        # whole rounding chain into one elementwise pass
+        out = ref.qdq(x2d, u, params[0, 0], params[0, 1], bits=bits)
     return out.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
 
 
@@ -461,6 +463,74 @@ def encode_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
     return payload, params
 
 
+def encode_partitioned_blocked(leaves, offsets, total: int, key, *,
+                               n_parts: int, bits: int = 8,
+                               bucket_elems: int = DEFAULT_BUCKET_ELEMS):
+    """Cache-blocked partitioned whole-tree encode (the jnp tier of
+    ``tree_encode_partitioned``).
+
+    The vmapped flatten-then-encode pipeline materializes the full flat
+    buffer and — worse — turns every per-partition dynamic_update_slice
+    (edge_pad, head/tail assembly) into a full-buffer scatter under vmap,
+    which is why the partitioned encode used to cost ~3x the flat encode.
+    Here each partition's buckets are assembled straight from their
+    (statically known) leaf fragments and statted/drawn/packed while
+    cache-hot, exactly like ``encode_flat_blocked`` — leaves are read
+    once, payload rows written once, no full-size temporary exists.
+
+    Bit-identical to the vmapped ``_encode_partitions`` reference:
+    partition p draws under fold_in(key, p), bucket b within it under
+    ``bucket_key(fold_in(key, p), b)``, and positions past the real
+    `total` repeat the LAST REAL element (edge_pad semantics), so they
+    never perturb a bucket's (lo, hi). Partition sizes are granule-
+    aligned, so no intra-bucket padding exists.
+
+    Returns (payload (n_parts, rows_p, 512) uint8,
+             params (n_parts, nb_p, 2) fp32).
+    """
+    part_elems, nb_p, rows_p = partition_geometry(
+        total, n_parts, bits=bits, bucket_elems=bucket_elems)
+    pack, cap, nb, _, _ = flat_geometry(part_elems, bits=bits,
+                                        bucket_elems=bucket_elems)
+    assert nb == nb_p, (nb, nb_p)
+    granule = pack * LANES
+    levels = (1 << bits) - 1
+    flats = [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves]
+    sizes = [f.shape[0] for f in flats]
+    last = flats[-1][-1]
+    payload = jnp.zeros((n_parts, rows_p, LANES), jnp.uint8)
+    params = jnp.zeros((n_parts, nb_p, 2), jnp.float32)
+    for p in range(n_parts):
+        pkey = bucket_key(key, p)   # fold_in(key, p): the partition key
+        row_off = 0
+        for b in range(nb):
+            start = p * part_elems + b * cap
+            belems = min(cap, part_elems - b * cap)
+            buf = jnp.zeros((belems,), jnp.float32)
+            for off, sz, fl in zip(offsets, sizes, flats):
+                lo_e, hi_e = max(off, start), min(off + sz, start + belems)
+                if lo_e < hi_e:
+                    buf = lax.dynamic_update_slice(
+                        buf, fl[lo_e - off:hi_e - off], (lo_e - start,))
+            if start + belems > total:
+                idx = jnp.arange(belems)
+                buf = jnp.where(start + idx < total, buf, last)
+            lo = jnp.min(buf)
+            hi = jnp.max(buf)
+            scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+            rb = belems // granule
+            x3 = buf.reshape(pack, rb, LANES)
+            u = jax.random.uniform(bucket_key(pkey, b), x3.shape,
+                                   jnp.float32)
+            rows = ref.encode_packed(x3, u, lo, scale, bits=bits)
+            payload = lax.dynamic_update_slice(
+                payload, rows.reshape(1, rb, LANES), (p, row_off, 0))
+            params = lax.dynamic_update_slice(
+                params, jnp.stack([lo, scale]).reshape(1, 1, 2), (p, b, 0))
+            row_off += rb
+    return payload, params
+
+
 @partial(jax.jit, static_argnames=("bits", "total", "bucket_elems",
                                    "backend"))
 def decode_flat(payload: jnp.ndarray, params: jnp.ndarray, *, total: int,
@@ -496,3 +566,90 @@ def decode_flat(payload: jnp.ndarray, params: jnp.ndarray, *, total: int,
                                params[nb - 1, 1], bits=bits)
     return _write_head_tail(head, tl.reshape(-1)[:t], (total,),
                             jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused ring hop: decode + add + re-encode as ONE dispatch. The partitioned
+# ring AllReduce's reduce-scatter hop is exactly this op over one partition.
+# ---------------------------------------------------------------------------
+
+
+def _dae_ref(payload, params, x4, u4, *, bits: int):
+    """jnp reference for the fused hop: the literal decode -> add ->
+    minmax -> encode composition on the (B, pack, Rb, C) bucket view."""
+    levels = (1 << bits) - 1
+    dec = ref.decode_packed_bucketed(payload, params[:, 0], params[:, 1],
+                                     bits=bits)
+    summed = dec + x4
+    lo, hi = ref.minmax_bucketed(summed.reshape(summed.shape[0], -1))
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    out = ref.encode_packed_bucketed(summed, u4, lo, scale, bits=bits)
+    return out, _stack2(lo, scale)
+
+
+@partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
+def decode_add_encode_flat(payload: jnp.ndarray, params: jnp.ndarray,
+                           local: jnp.ndarray, key: jax.Array, *,
+                           bits: int = 8,
+                           bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+                           backend: str = "auto"):
+    """ONE fused ring hop over a flat message: decode the packed payload,
+    add the `local` fp32 buffer, and re-encode under `key`, without ever
+    materializing the decoded or summed fp32 buffer (Pallas backend: the
+    two-phase ``decode_add_encode_bucketed`` kernel; jnp backend: the
+    composition reference). Bit-identical to
+
+        encode_flat(decode_flat(payload, params, total=local.size)
+                    + local, key)
+
+    on both backends. Granule-aligned buffers (every ring partition, by
+    ``partition_geometry`` construction) take the fused path; other sizes
+    fall back to the sequential composition, whose edge-pad handling the
+    fused kernel does not reproduce.
+    """
+    total = local.size
+    pack, cap, nb, rows_b, rows_kept = flat_geometry(
+        total, bits=bits, bucket_elems=bucket_elems)
+    granule = pack * LANES
+    flat = local.reshape(-1).astype(jnp.float32)
+    if total % granule:
+        dec = decode_flat(payload, params, total=total, bits=bits,
+                          bucket_elems=bucket_elems, backend=backend)
+        return encode_flat(dec + flat, key, bits=bits,
+                           bucket_elems=bucket_elems, backend=backend)
+    head_rows = (nb - 1) * rows_b
+    head_elems = (nb - 1) * cap
+    rt = rows_kept - head_rows
+    use_pallas = _use_pallas(backend)
+    head = head_p = None
+    if nb > 1:
+        x4 = flat[:head_elems].reshape(nb - 1, pack, rows_b, LANES)
+        hkeys = jax.vmap(lambda b: bucket_key(key, b))(jnp.arange(nb - 1))
+        u4 = jax.vmap(
+            lambda k: jax.random.uniform(k, (pack, rows_b, LANES),
+                                         jnp.float32))(hkeys)
+        pay4 = payload[:head_rows].reshape(nb - 1, rows_b, LANES)
+        if use_pallas:
+            head, head_p = kernel.decode_add_encode_bucketed(
+                pay4, params[:nb - 1], x4, u4, bits=bits,
+                block_r=_block_r(LANES, 8 * pack + 2),
+                interpret=_interpret())
+        else:
+            head, head_p = _dae_ref(pay4, params[:nb - 1], x4, u4,
+                                    bits=bits)
+        head = head.reshape(-1, LANES)
+    x3 = flat[head_elems:].reshape(1, pack, rt, LANES)
+    u3 = jax.random.uniform(bucket_key(key, nb - 1),
+                            (pack, rt, LANES),
+                            jnp.float32).reshape(1, pack, rt, LANES)
+    pay3 = payload[head_rows:].reshape(1, rt, LANES)
+    if use_pallas:
+        tl, tl_p = kernel.decode_add_encode_bucketed(
+            pay3, params[nb - 1:nb], x3, u3, bits=bits,
+            block_r=_block_r(LANES, 8 * pack + 2), interpret=_interpret())
+    else:
+        tl, tl_p = _dae_ref(pay3, params[nb - 1:nb], x3, u3, bits=bits)
+    out_payload = _write_head_tail(head, tl.reshape(rt, LANES),
+                                   (rows_kept, LANES), jnp.uint8)
+    out_params = _write_head_tail(head_p, tl_p, (nb, 2), jnp.float32)
+    return out_payload, out_params

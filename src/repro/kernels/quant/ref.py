@@ -16,10 +16,13 @@ from jax import lax
 
 
 def quant_params(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Global (lo, scale) for b-bit uniform knobs over [min(x), max(x)]."""
-    x32 = x.astype(jnp.float32)
-    lo = jnp.min(x32)
-    hi = jnp.max(x32)
+    """Global (lo, scale) for b-bit uniform knobs over [min(x), max(x)].
+
+    min and max come out of ONE variadic reduction pass (see
+    minmax_bucketed) instead of a min pass plus a max pass; min/max are
+    exact, so the result is bit-identical either way."""
+    lo, hi = minmax_bucketed(x.astype(jnp.float32).reshape(1, -1))
+    lo, hi = lo[0], hi[0]
     levels = (1 << bits) - 1
     scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
     return lo, scale
@@ -75,9 +78,22 @@ def decode_packed(payload: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarray:
     return decode(unpack_codes(payload, bits=bits), lo, scale)
 
 
+def qdq(x: jnp.ndarray, u: jnp.ndarray, lo, scale, *, bits: int) -> jnp.ndarray:
+    """Direct quantize-dequantize: bit-identical to
+    decode(encode(x, u, lo, scale)) — the codes are exact small integers
+    in fp32, so the uint8 cast round trip is a lossless detour — but one
+    fused elementwise chain for XLA instead of an encode pass, a uint8
+    store/load, and a decode pass."""
+    levels = (1 << bits) - 1
+    norm = (x.astype(jnp.float32) - lo) / scale
+    floor = jnp.floor(norm)
+    q = floor + (u < (norm - floor)).astype(jnp.float32)
+    return jnp.clip(q, 0.0, levels) * scale + lo
+
+
 def quantize_dequantize(x: jnp.ndarray, u: jnp.ndarray, *, bits: int) -> jnp.ndarray:
     lo, scale = quant_params(x, bits)
-    return decode(encode(x, u, lo, scale, bits=bits), lo, scale).astype(x.dtype)
+    return qdq(x, u, lo, scale, bits=bits).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -126,3 +126,140 @@ def test_wkv6_chunked_oracle_matches_recurrence():
     out_s, st_s = wkv_ref.wkv6_stepwise(r, k, v, lw, u)
     np.testing.assert_allclose(out_c, out_s, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(st_c, st_s, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------- flash_attn: skip grid ----
+
+def test_flash_skip_grid_prunes_masked_blocks():
+    """Fully masked k-blocks are ABSENT from the grid, not predicated out:
+    the causal pair table is the lower block-triangle, the windowed one a
+    block-band, and both are strictly smaller than the full n_q * n_k
+    grid the non-skipping kernel executes."""
+    from repro.kernels.flash_attn.kernel import skip_grid
+    full = skip_grid(1024, 128, 128, causal=False, window=0, s_valid=1024)
+    assert full.shape[1] == 8 * 8
+    causal = skip_grid(1024, 128, 128, causal=True, window=0, s_valid=1024)
+    assert causal.shape[1] == 8 * 9 // 2          # lower block-triangle
+    assert causal.shape[1] < full.shape[1]
+    band = skip_grid(1024, 128, 128, causal=True, window=128, s_valid=1024)
+    assert band.shape[1] == 8 + 7                 # diagonal + one off-band
+    tail = skip_grid(1024, 128, 128, causal=False, window=0, s_valid=300)
+    assert tail.shape[1] == 8 * 3                 # k-blocks past s_valid cut
+    # first/last flags mark each q-block's k-run for scratch init/flush
+    for maps in (full, causal, band, tail):
+        qi, _, first, last = maps
+        for qb in np.unique(qi):
+            run = np.flatnonzero(qi == qb)
+            assert first[run[0]] == 1 and last[run[-1]] == 1
+            assert first[run[1:]].sum() == 0 and last[run[:-1]].sum() == 0
+
+
+@pytest.mark.parametrize("s,causal,window",
+                         [(300, True, 0),        # tail: 300 % 128 != 0
+                          (300, True, 64),       # window + tail blocks
+                          (200, False, 0),       # non-causal tail
+                          (1024, True, 256)])    # banded, aligned
+def test_flash_skip_matches_full_grid(s, causal, window):
+    """Skip-grid output is BIT-identical to the non-skipping kernel (the
+    dropped tiles contribute exactly nothing) and fp32-close to the jnp
+    reference — including seq lens that are not block multiples."""
+    kq, kk, kv = jax.random.split(jax.random.fold_in(KEY, s + window), 3)
+    q = jax.random.normal(kq, (1, s, 4, 64), jnp.float32)
+    k = jax.random.normal(kk, (1, s, 2, 64), jnp.float32)
+    v = jax.random.normal(kv, (1, s, 2, 64), jnp.float32)
+    kw = dict(causal=causal, window=window, block_q=128, block_k=128)
+    out_skip = fa_ops.flash_attention(q, k, v, skip=True, **kw)
+    out_full = fa_ops.flash_attention(q, k, v, skip=False, **kw)
+    np.testing.assert_array_equal(out_skip, out_full)
+    exp = fa_ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out_skip, exp, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------ quant: fused ring hop (DAE) ----
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_decode_add_encode_fused_equals_sequential(bits, backend):
+    """The ONE-dispatch fused ring hop == decode; add; encode, bit for
+    bit, per bucket, on both backends (granule-aligned multi-bucket
+    buffer — the ring-partition regime)."""
+    pack = 8 // bits
+    total = 2048 * 2 + pack * 512          # 2 full buckets + short tail
+    kx, kl = jax.random.split(jax.random.fold_in(KEY, bits), 2)
+    x = jax.random.normal(kx, (total,))
+    local = jax.random.normal(kl, (total,))
+    ekey, hkey = jax.random.PRNGKey(5), jax.random.PRNGKey(6)
+    pay, prm = q_ops.encode_flat(x, ekey, bits=bits, bucket_elems=2048,
+                                 backend=backend)
+    dec = q_ops.decode_flat(pay, prm, total=total, bits=bits,
+                            bucket_elems=2048, backend=backend)
+    want_pay, want_prm = q_ops.encode_flat(dec + local, hkey, bits=bits,
+                                           bucket_elems=2048,
+                                           backend=backend)
+    got_pay, got_prm = q_ops.decode_add_encode_flat(
+        pay, prm, local, hkey, bits=bits, bucket_elems=2048,
+        backend=backend)
+    np.testing.assert_array_equal(got_pay, want_pay)
+    np.testing.assert_array_equal(got_prm, want_prm)
+
+
+def test_decode_add_encode_backends_bit_identical():
+    total = 2048 + 512
+    x = jax.random.normal(KEY, (total,))
+    local = jax.random.normal(jax.random.fold_in(KEY, 3), (total,))
+    pay, prm = q_ops.encode_flat(x, KEY, bits=8, bucket_elems=2048,
+                                 backend="jnp")
+    outs = [q_ops.decode_add_encode_flat(pay, prm, local,
+                                         jax.random.PRNGKey(9), bits=8,
+                                         bucket_elems=2048, backend=be)
+            for be in ("jnp", "pallas")]
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+
+
+def test_decode_add_encode_unaligned_fallback():
+    """Non-granule-aligned totals take the sequential composition path
+    and still match it exactly."""
+    total = 3001                            # not a multiple of 512
+    x = jax.random.normal(KEY, (total,))
+    local = jax.random.normal(jax.random.fold_in(KEY, 7), (total,))
+    hkey = jax.random.PRNGKey(4)
+    pay, prm = q_ops.encode_flat(x, KEY, bits=8, bucket_elems=2048,
+                                 backend="jnp")
+    dec = q_ops.decode_flat(pay, prm, total=total, bits=8,
+                            bucket_elems=2048, backend="jnp")
+    want = q_ops.encode_flat(dec + local, hkey, bits=8, bucket_elems=2048,
+                             backend="jnp")
+    got = q_ops.decode_add_encode_flat(pay, prm, local, hkey, bits=8,
+                                       bucket_elems=2048, backend="jnp")
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+def test_encode_partitioned_blocked_matches_vmapped_reference():
+    """The cache-blocked from-leaves partitioned encode (the jnp tier of
+    tree_encode_partitioned) is bit-identical to the vmapped
+    flatten-then-encode reference — same fold_in(key, p) partition keys,
+    same per-bucket draws, same edge-pad semantics."""
+    from repro.core import compression as C
+    tree = {"a": jax.random.normal(KEY, (300,)),
+            "b": jax.random.normal(jax.random.fold_in(KEY, 1), (7, 11)),
+            "c": jax.random.normal(jax.random.fold_in(KEY, 2), (1024,))}
+    layout = C.FlatLayout.from_tree(tree)
+    key = jax.random.PRNGKey(11)
+    for n_parts, be in ((4, 2048), (8, 2048)):
+        part_elems, _, _ = q_ops.partition_geometry(layout.total, n_parts,
+                                                    bits=8,
+                                                    bucket_elems=be)
+        want = C._encode_partitions(layout.flatten(tree), key,
+                                    n_parts=n_parts,
+                                    part_elems=part_elems, bits=8,
+                                    bucket_elems=be, backend="jnp")
+        got = jax.jit(q_ops.encode_partitioned_blocked,
+                      static_argnames=("offsets", "total", "n_parts",
+                                      "bits", "bucket_elems"))(
+            jax.tree_util.tree_leaves(tree), offsets=layout.offsets,
+            total=layout.total, key=key, n_parts=n_parts, bits=8,
+            bucket_elems=be)
+        np.testing.assert_array_equal(want[0], got[0])
+        np.testing.assert_array_equal(want[1], got[1])
