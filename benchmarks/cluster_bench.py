@@ -9,6 +9,15 @@ protocol's simulated makespan, applied updates, max staleness, wire
 traffic, and time-to-loss — the Figure 4.3-style loss-vs-wall-clock sweep
 the closed-form timelines could not produce.
 
+The failure sweep adds time-to-loss rows under NAMED failure scenarios
+(``lossy`` 10% message drop, ``crash_restart`` one mid-run crash +
+checkpoint rejoin, ``churn`` a permanent departure + a mid-run join) —
+each row carries its fault-ledger tallies and a ``loss_at_healthy_T``
+column: the loss at the HEALTHY run's makespan, i.e. what the failure
+cost at equal simulated wall-clock. Seeded fault plans make every row
+deterministic, so the CI delta gate treats any drift as a semantics
+change.
+
 Emits machine-readable ``BENCH_cluster.json`` at the repo root; ``--smoke``
 shrinks rounds/shapes to CI scale (the job uploads the JSON as an
 artifact, so the benchmark cannot rot unnoticed).
@@ -21,6 +30,7 @@ import math
 import os
 
 from repro import cluster
+from repro.cluster import faults
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
                         "BENCH_cluster.json")
@@ -104,22 +114,81 @@ def run_lm_sweep(*, rounds: int, smoke: bool, lr: float = 0.05,
     return rows
 
 
+def run_failure_sweep(*, rounds: int, lr: float = 0.1,
+                      codec: str = "rq4") -> list[dict]:
+    """Time-to-loss under the named failure scenarios of
+    ``cluster.faults`` — sync-PS degrades via quorum (first 6 of 8),
+    async-PS via bounded retry, DSGD via live-set mixing-matrix
+    re-derivation. Every trace's fault ledger is cross-validated against
+    its wire ledger before it is replayed."""
+    spec = cluster.ClusterSpec(
+        n_workers=N, t_compute=1.0,
+        multipliers=cluster.straggler_multipliers(
+            N, factor=STRAGGLER_FACTOR),
+        t_lat=1e-2, t_tr=2e-3, size_mb=1.0, codec=codec)
+    wl = cluster.quadratic_workload(n_workers=N)
+    healthy = cluster.make_protocol("sync_ps").schedule(spec,
+                                                        rounds=rounds)
+    t_healthy = healthy.makespan
+    scenarios = [
+        ("lossy", faults.lossy_network(N, p_drop=0.1, seed=0),
+         [("sync_ps", {"quorum": 6}), ("async_ps", {})]),
+        ("crash_restart",
+         faults.crash_restart(N, worker=1, t_down=0.25 * t_healthy,
+                              t_up=0.5 * t_healthy, seed=0),
+         [("sync_ps", {"quorum": 6}), ("async_ps", {})]),
+        ("churn",
+         faults.churn(N, departures=((N - 1, 0.3 * t_healthy),),
+                      joins=((N - 2, 0.6 * t_healthy),), p_drop=0.05,
+                      seed=0),
+         [("dsgd", {})]),
+    ]
+    rows = []
+    for scenario, plan, protos in scenarios:
+        for proto, kw in protos:
+            p = cluster.make_protocol(proto, **kw)
+            tr = (p.schedule(spec, horizon=t_healthy, plan=plan)
+                  if proto == "async_ps"
+                  else p.schedule(spec, rounds=rounds, plan=plan))
+            tally = faults.validate(tr)
+            res = cluster.replay(tr, wl, codec=codec, lr=lr,
+                                 eval_every=max(tr.n_updates // 50, 1))
+            rows.append({
+                "workload": "quadratic",
+                "protocol": res.protocol,
+                "scenario": scenario,
+                "makespan_s": round(res.makespan, 3),
+                "updates": res.updates_applied,
+                "wire_messages": res.n_wire_messages,
+                "final_loss": round(res.final_loss, 5),
+                "loss_at_healthy_T": round(res.loss_at(t_healthy), 5),
+                "dropped": tally["dropped"],
+                "retried": tally["retried"],
+                "timed_out": tally["timed_out"],
+                "rejoins": tally["rejoins"],
+                "epochs": tally["epochs"],
+            })
+    return rows
+
+
 def main(smoke: bool = False, lm: bool = False,
          out_path: str = OUT_PATH) -> str:
     rounds = 8 if smoke else 40
     rows = run_quadratic_sweep(rounds=rounds)
+    rows += run_failure_sweep(rounds=rounds)
     if lm or smoke:   # smoke always exercises the LM replay path (tiny)
         rows += run_lm_sweep(rounds=2 if smoke else rounds // 4,
                              smoke=smoke or not lm)
 
     print(f"# Virtual cluster: {N} workers, one {STRAGGLER_FACTOR:.0f}x "
           f"straggler, fused rq4 codec (time-to-loss at equal wall-clock)")
-    print(f"{'workload':16s} {'protocol':10s} {'makespan':>9s} "
-          f"{'updates':>8s} {'stale':>6s} {'wire#':>7s} {'loss':>9s} "
-          f"{'t@sync':>8s}")
+    print(f"{'workload':16s} {'protocol':10s} {'scenario':13s} "
+          f"{'makespan':>9s} {'updates':>8s} {'stale':>6s} {'wire#':>7s} "
+          f"{'loss':>9s} {'t@sync':>8s}")
     for r in rows:
         t_hit = r.get("t_to_sync_loss_s")
         print(f"{r['workload']:16s} {r['protocol']:10s} "
+              f"{r.get('scenario', 'healthy'):13s} "
               f"{r['makespan_s']:9.2f} {r['updates']:8d} "
               f"{r.get('max_staleness', 0):6d} {r['wire_messages']:7d} "
               f"{r['final_loss']:9.4f} "

@@ -6,10 +6,20 @@ trainer). On a real multi-host cluster each host would write its
 addressable shards under `<dir>/shard-<process_index>.npz`; here (single
 process) everything lands in one file. bf16 leaves are stored via a uint16
 view (npz has no native bfloat16).
+
+Writes are ATOMIC: the archive is written to a temporary file in the same
+directory and published with ``os.replace``, so a crash mid-checkpoint
+(the exact failure mode the cluster tier's FaultPlan injects) can never
+leave a half-written ``step-*.npz`` — a reader sees the previous complete
+checkpoint or the new one, nothing in between. ``load_state`` validates
+the archive and raises ``ValueError`` on truncated/corrupt files instead
+of deserializing garbage.
 """
 from __future__ import annotations
 
 import os
+import tempfile
+import zipfile
 from typing import Any
 
 import jax
@@ -44,7 +54,22 @@ def save_state(state: PyTree, directory: str, *, step: int = 0) -> str:
             arr = arr.view(np.uint16)
         flat[key] = arr
     fname = os.path.join(directory, f"step-{step:08d}.npz")
-    np.savez(fname, **flat)
+    # write-then-rename: the temp file lives in the target directory so
+    # os.replace is an atomic same-filesystem rename
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=".tmp-step-",
+                               suffix=".npz")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez(fh, **flat)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, fname)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return fname
 
 
@@ -57,14 +82,24 @@ def latest_checkpoint(directory: str) -> str | None:
 
 
 def load_state(template: PyTree, fname: str) -> PyTree:
-    data = np.load(fname)
     by_key: dict[str, np.ndarray] = {}
-    for key in data.files:
-        if key.startswith(_BF16_PREFIX):
-            by_key[key[len(_BF16_PREFIX):]] = \
-                data[key].view(jnp.bfloat16)
-        else:
-            by_key[key] = data[key]
+    try:
+        data = np.load(fname)
+        for key in data.files:
+            # materialize every member here: a truncated zip member
+            # surfaces while we still know which file to blame
+            if key.startswith(_BF16_PREFIX):
+                by_key[key[len(_BF16_PREFIX):]] = \
+                    data[key].view(jnp.bfloat16)
+            else:
+                by_key[key] = data[key]
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint {fname!r}: {e} — writes "
+            "are atomic, so this file was damaged after the fact; "
+            "restore from the previous step") from e
 
     def restore(path, leaf):
         key = _path_str(path)

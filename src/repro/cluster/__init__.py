@@ -10,16 +10,26 @@ real async / local-SGD / decentralized training.
   execute.py    replays a Trace against real vmapped training (quadratic
                 or repro-100m LM) through the fused flat-codec gradient
                 path -> loss-vs-simulated-wall-clock curves.
+  faults.py     seeded deterministic fault injection (FaultPlan) +
+                the fault ledger, quorum/timeout aggregation, and the
+                live-set mixing-matrix re-derivation every protocol's
+                graceful degradation builds on.
 """
 from repro.cluster.execute import (ClusterRunResult, Workload,
                                    lm_workload, quadratic_workload, replay)
+from repro.cluster.faults import (FaultLedger, FaultPlan, churn,
+                                  crash_restart, live_mixing_matrix,
+                                  lossy_network)
+from repro.cluster.faults import validate as validate_trace
 from repro.cluster.protocols import (PROTOCOLS, make_protocol,
                                      staleness_schedule)
 from repro.cluster.scheduler import (ClusterSpec, Trace, TraceEvent,
                                      straggler_multipliers)
 
 __all__ = [
-    "ClusterRunResult", "ClusterSpec", "PROTOCOLS", "Trace", "TraceEvent",
-    "Workload", "lm_workload", "make_protocol", "quadratic_workload",
-    "replay", "staleness_schedule", "straggler_multipliers",
+    "ClusterRunResult", "ClusterSpec", "FaultLedger", "FaultPlan",
+    "PROTOCOLS", "Trace", "TraceEvent", "Workload", "churn",
+    "crash_restart", "live_mixing_matrix", "lm_workload", "lossy_network",
+    "make_protocol", "quadratic_workload", "replay", "staleness_schedule",
+    "straggler_multipliers", "validate_trace",
 ]

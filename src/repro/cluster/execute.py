@@ -140,6 +140,13 @@ class ClusterRunResult:
         hit = np.nonzero(self.losses <= target)[0]
         return float(self.t_wall[hit[0]]) if hit.size else float("inf")
 
+    def loss_at(self, t: float) -> float:
+        """Eval loss of the last evaluation at simulated time <= ``t``
+        (the first recorded loss if none) — the equal-wall-clock
+        comparison point the fault acceptance tests use."""
+        idx = int(np.searchsorted(self.t_wall, t, side="right")) - 1
+        return float(self.losses[max(idx, 0)])
+
 
 def _sub(params, upd, lr):
     return jax.tree_util.tree_map(lambda p, u: p - lr * u, params, upd)
@@ -180,6 +187,12 @@ def replay(trace: Trace, workload: Workload, *, codec: str = "rq4",
         return cdc.tree_qdq_flat(workload.grad_fn(params, key),
                                  jax.random.fold_in(key, 7))
 
+    def qmodel(params, key):
+        """A model pulled through the compressed-checkpoint wire — the
+        payload a crashed replica rejoins with (same flat-codec bits the
+        scheduler charged for the ``ckpt*`` messages)."""
+        return cdc.tree_qdq_flat(params, key)
+
     replays = {"sync_ps": _replay_sync, "async_ps": _replay_async,
                "local_sgd": _replay_local_sgd, "dsgd": _replay_dsgd,
                "dcd": _replay_dcd, "ecd": _replay_ecd, "laq": _replay_laq}
@@ -187,7 +200,7 @@ def replay(trace: Trace, workload: Workload, *, codec: str = "rq4",
         raise KeyError(f"no replay for protocol '{trace.protocol}'")
     ts, losses = replays[trace.protocol](
         trace, workload, qgrad, lr=lr, eval_every=eval_every, n=n,
-        wkey=wkey, mixing_w=mixing_w)
+        wkey=wkey, mixing_w=mixing_w, qmodel=qmodel)
     return ClusterRunResult(trace.protocol, np.asarray(ts),
                             np.asarray(losses, dtype=float),
                             trace.n_updates, trace.max_staleness,
@@ -198,10 +211,34 @@ def _sync_times(trace, kinds=("sync", "gossip")):
     return [e.t_wall for e in trace.events if e.kind in kinds]
 
 
+def _row_mask(workers, n) -> jnp.ndarray:
+    m = np.zeros((n,), np.float32)
+    m[list(workers)] = 1.0
+    return jnp.asarray(m)
+
+
+def _where_rows(mask, a, b):
+    """Per-leaf ``where`` over the stacked worker axis."""
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.where(
+            mask.reshape((mask.shape[0],) + (1,) * (x.ndim - 1)) > 0,
+            x, y), a, b)
+
+
+def _set_row(params_w, w, row):
+    return jax.tree_util.tree_map(lambda pw, p: pw.at[w].set(p),
+                                  params_w, row)
+
+
+def _get_row(params_w, w):
+    return jax.tree_util.tree_map(lambda pw: pw[w], params_w)
+
+
 def _replay_sync(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                 mixing_w):
-    del mixing_w
+                 mixing_w, qmodel):
+    del mixing_w, qmodel
     rounds = trace.extra("rounds")
+    contributors = trace.extra_or("contributors")
 
     @jax.jit
     def round_step(params, r):
@@ -209,11 +246,28 @@ def _replay_sync(trace, workload, qgrad, *, lr, eval_every, n, wkey,
         q_w = jax.vmap(lambda k: qgrad(params, k))(keys)
         return _sub(params, _mean0(q_w), lr)
 
+    @jax.jit
+    def round_step_quorum(params, mask, r):
+        # graceful degradation: average the quorum's gradients only; an
+        # empty round leaves the model untouched (scale 0)
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        q_w = jax.vmap(lambda k: qgrad(params, k))(keys)
+        count = mask.sum()
+        scale = jnp.where(count > 0, 1.0 / jnp.maximum(count, 1.0), 0.0)
+        avg = jax.tree_util.tree_map(
+            lambda q: (q * mask.reshape((n,) + (1,) * (q.ndim - 1))
+                       ).sum(0) * scale, q_w)
+        return _sub(params, avg, lr)
+
     params = workload.params0
     ts, losses = [], []
     t_sync = _sync_times(trace)
     for r in range(rounds):
-        params = round_step(params, r)
+        if contributors is None:
+            params = round_step(params, r)
+        else:
+            params = round_step_quorum(params,
+                                       _row_mask(contributors[r], n), r)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             ts.append(t_sync[r])
             losses.append(float(workload.eval_loss(params)))
@@ -221,8 +275,12 @@ def _replay_sync(trace, workload, qgrad, *, lr, eval_every, n, wkey,
 
 
 def _replay_async(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                  mixing_w):
-    del n, mixing_w
+                  mixing_w, qmodel):
+    # faults need no special handling here: the scheduler already folded
+    # drops/retries/crashes into the update-event sequence (a crashed
+    # worker simply contributes no events while down; its rejoin pull is
+    # the next version it computes against)
+    del n, mixing_w, qmodel
 
     @jax.jit
     def apply_one(p_pulled, p_cur, key):
@@ -250,9 +308,10 @@ def _replay_async(trace, workload, qgrad, *, lr, eval_every, n, wkey,
 
 
 def _replay_local_sgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                      mixing_w):
+                      mixing_w, qmodel):
     del mixing_w
     rounds, h = trace.extra("rounds"), trace.extra("period_h")
+    present = trace.extra_or("present")
 
     @jax.jit
     def local_step(params_w, step):
@@ -264,26 +323,68 @@ def _replay_local_sgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
     def average(params_w):
         return _stack(_mean0(params_w), n)
 
-    params_w = _stack(workload.params0, n)
+    if present is None:
+        params_w = _stack(workload.params0, n)
+        ts, losses = [], []
+        t_sync = _sync_times(trace)
+        for r in range(rounds):
+            for k in range(h):
+                params_w = local_step(params_w, r * h + k)
+            params_w = average(params_w)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                ts.append(t_sync[r])
+                losses.append(float(workload.eval_loss(_mean0(params_w))))
+        return ts, losses
+
+    # -- fault path: present rows step, the quorum's contributors are
+    # averaged into the PS model, receivers adopt it, rejoiners pull it
+    # through the compressed-checkpoint wire
+    contributors = trace.extra("contributors")
+    receivers = trace.extra("receivers")
+    rejoiners = trace.extra("rejoiners")
+
+    @jax.jit
+    def local_step_masked(params_w, mask, step):
+        stepped = local_step(params_w, step)
+        return _where_rows(mask, stepped, params_w)
+
+    @jax.jit
+    def masked_avg(params_w, mask):
+        count = mask.sum()
+        scale = jnp.where(count > 0, 1.0 / jnp.maximum(count, 1.0), 0.0)
+        return jax.tree_util.tree_map(
+            lambda p: (p * mask.reshape((n,) + (1,) * (p.ndim - 1))
+                       ).sum(0) * scale, params_w)
+
+    model = workload.params0        # the PS's broadcast copy
+    params_w = _stack(model, n)
     ts, losses = [], []
     t_sync = _sync_times(trace)
     for r in range(rounds):
+        for w, _donor in rejoiners[r]:
+            pulled = qmodel(model, jax.random.fold_in(wkey(w, r), 999983))
+            params_w = _set_row(params_w, w, pulled)
+        mask_p = _row_mask(present[r], n)
         for k in range(h):
-            params_w = local_step(params_w, r * h + k)
-        params_w = average(params_w)
+            params_w = local_step_masked(params_w, mask_p, r * h + k)
+        if contributors[r]:
+            model = masked_avg(params_w, _row_mask(contributors[r], n))
+        params_w = _where_rows(_row_mask(receivers[r], n),
+                               _stack(model, n), params_w)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             ts.append(t_sync[r])
-            losses.append(float(workload.eval_loss(_mean0(params_w))))
+            losses.append(float(workload.eval_loss(model)))
     return ts, losses
 
 
 def _replay_dsgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                 mixing_w):
+                 mixing_w, qmodel):
     rounds = trace.extra("rounds")
     if mixing_w is None:
         # the matrix the scheduler costed rides in the trace itself
         mixing_w = np.asarray(trace.extra("w"))
     w_mat = jnp.asarray(np.asarray(mixing_w), jnp.float32)
+    present = trace.extra_or("present")
 
     @jax.jit
     def round_step(params_w, r):
@@ -294,14 +395,60 @@ def _replay_dsgd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
         return jax.tree_util.tree_map(
             lambda p: jnp.tensordot(w_mat, p, axes=[[1], [0]]), stepped)
 
+    if present is None:
+        params_w = _stack(workload.params0, n)
+        ts, losses = [], []
+        t_sync = _sync_times(trace)
+        for r in range(rounds):
+            params_w = round_step(params_w, r)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                ts.append(t_sync[r])
+                losses.append(float(workload.eval_loss(_mean0(params_w))))
+        return ts, losses
+
+    # -- fault path: each membership epoch re-derives W over the live
+    # set (the same matrix the scheduler validated through the Birkhoff
+    # decomposition); a lost gossip message returns its weight to the
+    # receiver's self-weight (the sender's column just leaks — that send
+    # was paid and vanished); rejoiners pull their donor's model through
+    # the compressed-checkpoint wire
+    from repro.cluster import faults as _faults
+
+    rejoiners = trace.extra("rejoiners")
+    dropped = trace.extra("dropped_edges")
+    base_w = np.asarray(np.asarray(mixing_w), dtype=float)
+
+    @jax.jit
+    def round_step_masked(params_w, w_eff, mask, r):
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        stepped = jax.vmap(lambda p, k: _sub(p, qgrad(p, k), lr))(params_w,
+                                                                  keys)
+        stepped = _where_rows(mask, stepped, params_w)
+        return jax.tree_util.tree_map(
+            lambda p: jnp.tensordot(w_eff, p, axes=[[1], [0]]), stepped)
+
     params_w = _stack(workload.params0, n)
     ts, losses = [], []
     t_sync = _sync_times(trace)
     for r in range(rounds):
-        params_w = round_step(params_w, r)
+        for w, donor in rejoiners[r]:
+            if donor >= 0:
+                pulled = qmodel(_get_row(params_w, donor),
+                                jax.random.fold_in(wkey(w, r), 999983))
+                params_w = _set_row(params_w, w, pulled)
+        w_eff = _faults.live_mixing_matrix(base_w, present[r])
+        for src, dst in dropped[r]:
+            w_eff[dst, dst] += w_eff[dst, src]
+            w_eff[dst, src] = 0.0
+        params_w = round_step_masked(params_w,
+                                     jnp.asarray(w_eff, jnp.float32),
+                                     _row_mask(present[r], n), r)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
+            rows = list(present[r]) or list(range(n))
+            live = jax.tree_util.tree_map(
+                lambda p: p[np.asarray(rows)].mean(0), params_w)
             ts.append(t_sync[r])
-            losses.append(float(workload.eval_loss(_mean0(params_w))))
+            losses.append(float(workload.eval_loss(live)))
     return ts, losses
 
 
@@ -311,13 +458,21 @@ def _replay_compressed_decentralized(trace, workload, *, lr, eval_every, n,
     decoded quantized delta of each worker's half-step (gradients are NOT
     compressed — only the broadcast delta is, exactly the
     DCD/ECDGossipExchange wire), mixed with the trace's own W and sized
-    by the trace's own codec."""
+    by the trace's own codec.
+
+    Fault traces: deltas are RELIABLE (the scheduler retried every drop),
+    so the only degradation is membership — each epoch mixes with the
+    re-derived live matrix, absent workers' public copies freeze, and
+    rejoiners pull their donor's x̂ through the compressed-checkpoint
+    wire (error-feedback residual reset to zero: the errors it accrued
+    before crashing died with it)."""
     rounds = trace.extra("rounds")
     if mixing_w is None:
         mixing_w = np.asarray(trace.extra("w"))
     w_mat = jnp.asarray(np.asarray(mixing_w), jnp.float32)
     cdc = compression.codec(trace.extra("codec"))   # guaranteed by scheduler
     layout = compression.FlatLayout.from_tree(workload.params0)
+    present = trace.extra_or("present")
 
     @jax.jit
     def round_step(xhat_w, err_w, r):
@@ -331,38 +486,79 @@ def _replay_compressed_decentralized(trace, workload, *, lr, eval_every, n,
                      )(v, keys)
         return xhat_w + q, (v - q if ec else err_w)
 
+    @jax.jit
+    def round_step_masked(xhat_w, err_w, w_eff, mask, r):
+        keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
+        params_w = jax.vmap(layout.unflatten)(xhat_w)
+        g_w = jax.vmap(workload.grad_fn)(params_w, keys)
+        gflat_w = jax.vmap(layout.flatten)(g_w) * mask[:, None]
+        x_half = w_eff @ xhat_w - lr * gflat_w
+        v = x_half - xhat_w + (err_w if ec else 0.0)
+        q = jax.vmap(lambda x, k: cdc.flat_qdq(x, jax.random.fold_in(k, 7))
+                     )(v, keys) * mask[:, None]
+        err_new = (jnp.where(mask[:, None] > 0, v - q, err_w) if ec
+                   else err_w)
+        return xhat_w + q, err_new
+
     xhat_w = jax.vmap(layout.flatten)(_stack(workload.params0, n))
     err_w = jnp.zeros_like(xhat_w)
     ts, losses = [], []
     t_sync = _sync_times(trace)
+
+    if present is None:
+        for r in range(rounds):
+            xhat_w, err_w = round_step(xhat_w, err_w, r)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                ts.append(t_sync[r])
+                losses.append(float(workload.eval_loss(
+                    layout.unflatten(xhat_w.mean(0)))))
+        return ts, losses
+
+    from repro.cluster import faults as _faults
+
+    rejoiners = trace.extra("rejoiners")
+    base_w = np.asarray(np.asarray(mixing_w), dtype=float)
     for r in range(rounds):
-        xhat_w, err_w = round_step(xhat_w, err_w, r)
+        for w, donor in rejoiners[r]:
+            if donor >= 0:
+                key = jax.random.fold_in(wkey(w, r), 999983)
+                xhat_w = xhat_w.at[w].set(cdc.flat_qdq(xhat_w[donor],
+                                                       key))
+                err_w = err_w.at[w].set(0.0)
+        w_eff = _faults.live_mixing_matrix(base_w, present[r])
+        xhat_w, err_w = round_step_masked(
+            xhat_w, err_w, jnp.asarray(w_eff, jnp.float32),
+            _row_mask(present[r], n), r)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
+            rows = np.asarray(list(present[r]) or list(range(n)))
             ts.append(t_sync[r])
             losses.append(float(workload.eval_loss(
-                layout.unflatten(xhat_w.mean(0)))))
+                layout.unflatten(xhat_w[rows].mean(0)))))
     return ts, losses
 
 
 def _replay_dcd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                mixing_w):
-    del qgrad   # DCD compresses the broadcast delta, not the gradient
+                mixing_w, qmodel):
+    del qgrad, qmodel   # DCD compresses the broadcast delta + checkpoint
     return _replay_compressed_decentralized(
         trace, workload, lr=lr, eval_every=eval_every, n=n, wkey=wkey,
         mixing_w=mixing_w, ec=False)
 
 
 def _replay_ecd(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                mixing_w):
-    del qgrad
+                mixing_w, qmodel):
+    del qgrad, qmodel
     return _replay_compressed_decentralized(
         trace, workload, lr=lr, eval_every=eval_every, n=n, wkey=wkey,
         mixing_w=mixing_w, ec=True)
 
 
 def _replay_laq(trace, workload, qgrad, *, lr, eval_every, n, wkey,
-                mixing_w):
-    del mixing_w
+                mixing_w, qmodel):
+    # fault traces need no special handling: the senders-by-round table
+    # below is read from the update events, which already carry only the
+    # contributions that survived drops/timeouts/crashes
+    del mixing_w, qmodel
     rounds = trace.extra("rounds")
     senders_by_round = np.zeros((rounds, n), bool)
     for e in trace.updates():

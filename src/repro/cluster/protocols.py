@@ -41,11 +41,16 @@ class SyncPS:
     are unchanged, only the comm costing differs."""
 
     name: str = "sync_ps"
+    timeout: Optional[float] = None     # graceful degradation: per-round
+    quorum: Optional[int] = None        # deadline + backup-worker quorum
 
     def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
-                 horizon: Optional[float] = None) -> Trace:
+                 horizon: Optional[float] = None,
+                 plan: Optional[scheduler.F.FaultPlan] = None) -> Trace:
         del horizon
-        return scheduler.schedule_sync_ps(spec, rounds=rounds)
+        return scheduler.schedule_sync_ps(spec, rounds=rounds, plan=plan,
+                                          timeout=self.timeout,
+                                          quorum=self.quorum)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,14 +60,18 @@ class AsyncPS:
     name: str = "async_ps"
 
     def schedule(self, spec: ClusterSpec, *, rounds: Optional[int] = None,
-                 horizon: Optional[float] = None) -> Trace:
+                 horizon: Optional[float] = None,
+                 plan: Optional[scheduler.F.FaultPlan] = None) -> Trace:
         if horizon is None:
             if rounds is None:
                 raise ValueError("async_ps needs horizon= (or rounds= to "
                                  "borrow the sync-PS makespan)")
             # equal-wall-clock convention: run as long as sync-PS would
-            horizon = scheduler.schedule_sync_ps(spec, rounds=rounds).makespan
-        return scheduler.schedule_async_ps(spec, horizon=horizon)
+            # UNDER THE SAME PLAN (faults slow both sides equally)
+            horizon = scheduler.schedule_sync_ps(spec, rounds=rounds,
+                                                 plan=plan).makespan
+        return scheduler.schedule_async_ps(spec, horizon=horizon,
+                                           plan=plan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +82,17 @@ class LocalSGD:
 
     period_h: int = 8
     name: str = "local_sgd"
+    timeout: Optional[float] = None
+    quorum: Optional[int] = None
 
     def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
-                 horizon: Optional[float] = None) -> Trace:
+                 horizon: Optional[float] = None,
+                 plan: Optional[scheduler.F.FaultPlan] = None) -> Trace:
         del horizon
         return scheduler.schedule_local_sgd(spec, period_h=self.period_h,
-                                            rounds=rounds)
+                                            rounds=rounds, plan=plan,
+                                            timeout=self.timeout,
+                                            quorum=self.quorum)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,10 +132,11 @@ class Decentralized:
         raise ValueError(f"unknown topology {self.topology}")
 
     def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
-                 horizon: Optional[float] = None) -> Trace:
+                 horizon: Optional[float] = None,
+                 plan: Optional[scheduler.F.FaultPlan] = None) -> Trace:
         del horizon
         return scheduler.schedule_decentralized(
-            spec, rounds=rounds, w=self.matrix(spec.n_workers))
+            spec, rounds=rounds, w=self.matrix(spec.n_workers), plan=plan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,11 +152,12 @@ class CompressedDecentralized(Decentralized):
     name: str = "dcd"
 
     def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
-                 horizon: Optional[float] = None) -> Trace:
+                 horizon: Optional[float] = None,
+                 plan: Optional[scheduler.F.FaultPlan] = None) -> Trace:
         del horizon
         return scheduler.schedule_decentralized(
             spec, rounds=rounds, w=self.matrix(spec.n_workers),
-            codec=self.compressor, protocol=self.name)
+            codec=self.compressor, protocol=self.name, plan=plan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,11 +178,16 @@ class LAQ:
 
     skip: int = 2
     name: str = "laq"
+    timeout: Optional[float] = None
+    quorum: Optional[int] = None
 
     def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
-                 horizon: Optional[float] = None) -> Trace:
+                 horizon: Optional[float] = None,
+                 plan: Optional[scheduler.F.FaultPlan] = None) -> Trace:
         del horizon
-        return scheduler.schedule_laq(spec, rounds=rounds, skip=self.skip)
+        return scheduler.schedule_laq(spec, rounds=rounds, skip=self.skip,
+                                      plan=plan, timeout=self.timeout,
+                                      quorum=self.quorum)
 
 
 PROTOCOLS: dict[str, Callable[..., Any]] = {

@@ -79,12 +79,22 @@ class Msg:
 
 @dataclasses.dataclass(frozen=True)
 class Delivery:
+    """One completed transfer.
+
+    ``status`` makes the ledger self-describing under fault injection
+    (``repro.cluster.faults``): 'ok' reached its receiver, 'lost' went
+    on the wire and vanished (the ports were still occupied — the
+    sender paid), 'dup' is a delivered-and-ignored duplicate. Healthy
+    simulations only ever emit 'ok'.
+    """
+
     t_start: float
     t_end: float
     src: int
     dst: int
     size: float
     tag: str = ""
+    status: str = "ok"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,7 +146,8 @@ def split_msg_records(t0: float, src: int, dst: int, size: float, tag: str,
                       tag, i, k) for i in range(k)]
 
 
-def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
+def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float,
+             statuses: Optional[dict] = None) -> SimResult:
     """Run the switch model over a set of message requests.
 
     Messages become eligible at t_req (or when their FIFO predecessor on the
@@ -144,6 +155,11 @@ def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
     per-request eligibility). Eligible messages start as soon as both the
     sender send-port and receiver recv-port are free; ties break by request
     time then insertion order, which matches the paper's walk-throughs.
+
+    ``statuses`` (fault injection) maps ``(src, dst, tag)`` to a
+    ``Delivery.status`` — 'lost' and 'dup' messages still occupy ports
+    and appear in the ledgers (the wire carried them), they just never
+    reach the protocol.
     """
     msgs = list(msgs)
     n = 0
@@ -175,7 +191,9 @@ def simulate(msgs: Iterable[Msg], *, t_lat: float, t_tr: float) -> SimResult:
         t_end = t0 + dur
         send_free[m.src] = t_end
         recv_free[m.dst] = t_end
-        deliveries.append(Delivery(t0, t_end, m.src, m.dst, m.size, m.tag))
+        status = (statuses or {}).get((m.src, m.dst, m.tag), "ok")
+        deliveries.append(Delivery(t0, t_end, m.src, m.dst, m.size, m.tag,
+                                   status))
         records += split_msg_records(t0, m.src, m.dst, m.size, m.tag,
                                      m.n_messages, t_lat=t_lat, t_tr=t_tr)
     makespan = max(d.t_end for d in deliveries) if deliveries else 0.0

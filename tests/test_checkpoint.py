@@ -1,0 +1,73 @@
+"""Checkpoint robustness: atomic npz writes + corrupt-file validation.
+
+A crash mid-checkpoint (the failure mode ``cluster.FaultPlan`` injects
+into the simulated tier) must never leave a half-written ``step-*.npz``:
+``save_state`` publishes with write-temp-then-``os.replace``, and
+``load_state`` raises ``ValueError`` on truncated/corrupt archives
+instead of deserializing garbage.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_state, save_state
+
+
+def _state():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((4,), jnp.bfloat16)}
+
+
+def test_save_publishes_atomically_no_temp_residue(tmp_path):
+    f = save_state(_state(), str(tmp_path), step=3)
+    assert os.path.basename(f) == "step-00000003.npz"
+    # the temp file was renamed away, never left behind
+    assert sorted(os.listdir(tmp_path)) == ["step-00000003.npz"]
+    restored = load_state(_state(), f)
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"]),
+        np.arange(6, dtype=np.float32).reshape(2, 3))
+    assert restored["b"].dtype == jnp.bfloat16
+
+
+def test_truncated_checkpoint_raises_cleanly(tmp_path):
+    f = save_state(_state(), str(tmp_path), step=0)
+    raw = open(f, "rb").read()
+    for cut in (10, len(raw) // 2, len(raw) - 4):
+        bad = tmp_path / "bad.npz"
+        bad.write_bytes(raw[:cut])
+        with pytest.raises(ValueError, match="corrupt or truncated"):
+            load_state(_state(), str(bad))
+
+
+def test_garbage_file_raises_cleanly(tmp_path):
+    bad = tmp_path / "garbage.npz"
+    bad.write_bytes(b"this is not a zip archive at all")
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_state(_state(), str(bad))
+
+
+def test_missing_file_stays_file_not_found(tmp_path):
+    # absence is not corruption — the caller distinguishes the two
+    with pytest.raises(FileNotFoundError):
+        load_state(_state(), str(tmp_path / "step-00000042.npz"))
+
+
+def test_failed_write_leaves_previous_checkpoint_intact(tmp_path):
+    f = save_state(_state(), str(tmp_path), step=7)
+    before = open(f, "rb").read()
+
+    class Boom:
+        # a leaf whose device_get explodes mid-serialization
+        shape, dtype = (2,), np.float32
+
+        def __array__(self, *a, **k):
+            raise RuntimeError("simulated crash mid-checkpoint")
+
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_state({"w": Boom()}, str(tmp_path), step=7)
+    # the failed write neither clobbered step-7 nor left temp files
+    assert sorted(os.listdir(tmp_path)) == ["step-00000007.npz"]
+    assert open(f, "rb").read() == before

@@ -1,0 +1,332 @@
+"""Fault injection, elastic membership, and graceful degradation.
+
+Covers the PR-7 robustness tier: deterministic seeded `FaultPlan`s,
+the fault ledger's exact accounting against the wire ledger, quorum /
+timeout (backup-worker) aggregation, live-set mixing-matrix
+re-derivation at membership epochs, and the ACCEPTANCE criterion —
+under 10% message loss plus one mid-run crash-restart, sync-PS-with-
+quorum and async-PS replay within 2x of the healthy run's loss at
+equal simulated wall-clock, on the quadratic and the reduced
+repro-100m LM.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.cluster import faults
+from repro.core import mixing
+
+N = 8
+INF = float("inf")
+
+
+def _spec(**kw):
+    base = dict(n_workers=N, t_compute=1.0,
+                multipliers=cluster.straggler_multipliers(N, factor=4.0),
+                t_lat=1e-2, t_tr=2e-3, size_mb=1.0)
+    base.update(kw)
+    return cluster.ClusterSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan membership semantics
+# ---------------------------------------------------------------------------
+
+
+def test_crash_window_membership():
+    p = faults.FaultPlan(4, crashes=((1, 2.0, 5.0),))
+    assert p.is_up(1, 1.9) and not p.is_up(1, 2.0)
+    assert not p.is_up(1, 4.9) and p.is_up(1, 5.0)
+    assert p.down_in(1, 1.0, 3.0)        # span enters the window
+    assert p.down_in(1, 3.0, 3.5)        # span inside the window
+    assert not p.down_in(1, 0.0, 1.9)    # span before the window
+    assert p.restart_after(1, 3.0) == 5.0
+    assert p.restart_after(1, 6.0) == 6.0
+    assert p.alive_at(3.0) == (0, 2, 3)
+
+
+def test_permanent_departure_and_join():
+    p = faults.churn(4, departures=((3, 2.0),), joins=((2, 1.5),))
+    assert not p.is_up(2, 1.0) and p.is_up(2, 1.5)
+    assert p.join_time(2) == 1.5
+    assert p.restart_after(3, 2.5) is None     # never comes back
+    assert p.down_in(2, 0.0, 1.0)              # not born yet = absent
+    assert p.alive_at(0.0) == (0, 1, 3)
+    assert p.alive_at(3.0) == (0, 1, 2)
+
+
+def test_plan_validates_inputs():
+    with pytest.raises(ValueError, match="empty"):
+        faults.FaultPlan(4, crashes=((0, 5.0, 2.0),))
+    with pytest.raises(ValueError, match="names worker"):
+        faults.FaultPlan(4, crashes=((9, 1.0, 2.0),))
+    with pytest.raises(ValueError, match="names worker"):
+        faults.FaultPlan(4, joins=((7, 1.0),))
+
+
+def test_message_decisions_are_pure_functions():
+    p = faults.FaultPlan(N, seed=5, p_drop=0.3, p_dup=0.2,
+                         delay_scale=0.1)
+    for _ in range(3):   # identical regardless of call order / repetition
+        assert p.drops_msg(0, 8, "agg3", 0) == p.drops_msg(0, 8, "agg3", 0)
+        assert p.extra_delay(2, 5, "gossip1") == \
+            p.extra_delay(2, 5, "gossip1")
+    # distinct identities draw independently (not all equal)
+    draws = {p.drops_msg(s, 8, f"agg{r}", 0)
+             for s in range(N) for r in range(20)}
+    assert draws == {True, False}
+
+
+# ---------------------------------------------------------------------------
+# Determinism (satellite: bit-identical traces for every protocol)
+# ---------------------------------------------------------------------------
+
+
+def _schedule(name, spec, plan=None):
+    kw = {"quorum": 6} if name in ("sync_ps", "laq") else {}
+    return cluster.make_protocol(name, **kw).schedule(spec, rounds=3,
+                                                      plan=plan)
+
+
+def test_straggler_and_jitter_bit_identical_across_runs():
+    assert cluster.straggler_multipliers(N, factor=4.0) == \
+        cluster.straggler_multipliers(N, factor=4.0)
+    s1, s2 = _spec(jitter=0.4, seed=11), _spec(jitter=0.4, seed=11)
+    for w in range(N):
+        for step in range(5):
+            assert s1.compute_time(w, step) == s2.compute_time(w, step)
+
+
+@pytest.mark.parametrize("name", sorted(cluster.PROTOCOLS))
+def test_trace_deterministic_per_protocol(name):
+    """Same seed -> identical trace, with straggler jitter AND a fault
+    plan active (crash + drops + dups + delays)."""
+    plan = faults.FaultPlan(N, seed=2, p_drop=0.15, p_dup=0.1,
+                            delay_scale=0.05,
+                            crashes=((2, 1.0, 4.0),))
+    t1 = _schedule(name, _spec(jitter=0.3, seed=9), plan)
+    t2 = _schedule(name, _spec(jitter=0.3, seed=9), plan)
+    assert t1 == t2
+    assert t1.faults == t2.faults
+    faults.validate(t1)
+
+
+@pytest.mark.parametrize("name", sorted(cluster.PROTOCOLS))
+def test_healthy_trace_carries_no_ledger(name):
+    tr = cluster.make_protocol(name).schedule(_spec(), rounds=2)
+    assert tr.faults is None
+    faults.validate(tr)   # empty story validates too
+
+
+# ---------------------------------------------------------------------------
+# Ledger exactness
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_accounts_every_message_exactly():
+    plan = faults.FaultPlan(N, seed=4, p_drop=0.2, p_dup=0.1)
+    for name in ("sync_ps", "async_ps", "dsgd", "ecd"):
+        tr = _schedule(name, _spec(), plan)
+        tally = faults.validate(tr)
+        lost = sum(1 for d in tr.comm if d.status == "lost")
+        dup = sum(1 for d in tr.comm if d.status == "dup")
+        assert tally["dropped"] == lost > 0, name
+        assert tally["duplicated"] == dup
+        assert tally["delivered"] == len(tr.comm) - lost - dup
+        # reliable-channel retries ride the wire with ~a tags
+        assert tally["retried"] == sum(
+            1 for d in tr.comm if "~a" in d.tag and d.status != "dup")
+
+
+def test_validate_catches_a_forged_ledger():
+    plan = faults.lossy_network(N, p_drop=0.3, seed=0)
+    tr = _schedule("sync_ps", _spec(), plan)
+    assert tr.faults.n_dropped > 0
+    forged = dataclasses.replace(tr, faults=faults.FaultLedger())
+    with pytest.raises(AssertionError):
+        faults.validate(forged)
+
+
+def test_async_horizon_cut_reconciles_ledger():
+    """Satellite: no in-flight message is dropped from the timeline but
+    kept in the wire ledger — every recorded delivery completes inside
+    the horizon and applied updates == delivered pushes."""
+    spec = _spec(jitter=0.2, seed=3)
+    for horizon in (5.0, 17.3, 40.0):
+        tr = cluster.make_protocol("async_ps").schedule(spec,
+                                                        horizon=horizon)
+        assert all(d.t_end <= horizon + 1e-9 for d in tr.comm)
+        n_push = sum(1 for d in tr.comm
+                     if d.dst == N and d.status == "ok")
+        assert n_push == tr.n_updates
+        # per-switch records match deliveries 1:1 (n_messages = 1 here)
+        assert len(tr.messages) == len(tr.comm)
+
+
+# ---------------------------------------------------------------------------
+# Quorum / timeout (backup-worker aggregation)
+# ---------------------------------------------------------------------------
+
+
+def test_collect_quorum_kth_arrival_and_deadline():
+    led = faults._LedgerBuilder()
+    arrivals = [(1.0, 0), (2.0, 1), (3.0, 2), (9.0, 3)]
+    # quorum of 2: closes at the 2nd arrival, two stragglers recorded
+    t_agg, contribs = faults.collect_quorum(
+        arrivals, t_start=0.0, timeout=None, quorum=2, ledger=led,
+        round_idx=0)
+    assert t_agg == 2.0 and contribs == [0, 1]
+    assert [r.worker for r in led.timeouts] == [2, 3]
+    # deadline binds before the quorum is met -> shortfall
+    led = faults._LedgerBuilder()
+    t_agg, contribs = faults.collect_quorum(
+        arrivals, t_start=0.0, timeout=2.5, quorum=4, ledger=led,
+        round_idx=1)
+    assert t_agg == 2.5 and contribs == [0, 1]
+    assert led.shortfalls[0].n_got == 2 and led.shortfalls[0].n_wanted == 4
+    # no limits: take everything that arrives
+    led = faults._LedgerBuilder()
+    t_agg, contribs = faults.collect_quorum(
+        arrivals, t_start=0.0, timeout=None, quorum=None, ledger=led,
+        round_idx=2)
+    assert t_agg == 9.0 and contribs == [0, 1, 2, 3]
+    assert not led.timeouts
+
+
+def test_sync_quorum_drops_the_straggler():
+    """With quorum N-1 the 4x straggler is cut every round: the quorum
+    trace's makespan beats the barrier's by a wide margin."""
+    spec = _spec()
+    full = cluster.make_protocol("sync_ps").schedule(spec, rounds=4)
+    q = cluster.make_protocol("sync_ps", quorum=N - 1).schedule(
+        spec, rounds=4, plan=faults.FaultPlan(N))
+    assert q.makespan < 0.5 * full.makespan
+    straggler = int(np.argmax(spec.multipliers))
+    assert all(r.worker == straggler for r in q.faults.timeouts)
+    assert q.faults.n_timed_out == 4
+
+
+# ---------------------------------------------------------------------------
+# Elastic gossip: W over the live set
+# ---------------------------------------------------------------------------
+
+
+def test_live_mixing_matrix_doubly_stochastic_over_live_set():
+    w = mixing.ring(N)
+    for alive in ([0, 1, 2, 3, 4, 5, 6], [1, 3, 5], [0], list(range(N))):
+        wl = faults.live_mixing_matrix(w, alive)
+        assert np.allclose(wl.sum(0), 1.0) and np.allclose(wl.sum(1), 1.0)
+        assert np.allclose(wl, wl.T)
+        dead = [i for i in range(N) if i not in alive]
+        for i in dead:   # absent workers are identity rows
+            e = np.zeros(N)
+            e[i] = 1.0
+            assert np.allclose(wl[i], e)
+        # still inside the Birkhoff polytope (what GossipMix lowers)
+        terms = mixing.birkhoff_decomposition(wl)
+        assert sum(c for c, _ in terms) == pytest.approx(1.0)
+
+
+def test_gossip_rederives_matrix_at_each_epoch():
+    plan = faults.churn(N, departures=((5, 3.0),), joins=((7, 4.0),))
+    tr = cluster.make_protocol("dsgd").schedule(_spec(), rounds=6,
+                                                plan=plan)
+    epochs = tr.faults.epochs
+    assert len(epochs) >= 2                      # membership changed
+    assert len({e.alive for e in epochs}) == len(epochs)
+    assert all(e.n_birkhoff_terms > 0 for e in epochs)
+    # a rejoin (the mid-run join) pulled from a live donor
+    assert any(r.worker == 7 and r.donor != 7 for r in tr.faults.rejoins)
+    # per-round present sets ride in the extras for the replay
+    present = tr.extra("present")
+    assert any(5 not in p for p in present)
+    assert any(7 in p for p in present)
+
+
+def test_fault_path_rejects_ring_allreduce():
+    spec = _spec(allreduce="ring")
+    with pytest.raises(ValueError, match="ring"):
+        cluster.make_protocol("sync_ps", quorum=4).schedule(
+            spec, rounds=2, plan=faults.FaultPlan(N))
+
+
+def test_reliable_channels_terminate_under_total_loss():
+    """p_drop = 1: unreliable uplinks lose everything (shortfall rounds),
+    reliable broadcasts force delivery at max_retries — simulation ends."""
+    plan = faults.FaultPlan(N, seed=0, p_drop=1.0, max_retries=2)
+    tr = cluster.make_protocol("sync_ps", quorum=4).schedule(
+        _spec(), rounds=2, plan=plan)
+    tally = faults.validate(tr)
+    assert tally["shortfalls"] == 2          # no uplink ever arrives
+    assert math.isfinite(tr.makespan)
+    # every broadcast burned its retry budget, then landed
+    assert tally["retried"] >= tally["shortfalls"]
+
+
+# ---------------------------------------------------------------------------
+# Faulty replays train (and the ACCEPTANCE criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["local_sgd", "dsgd", "dcd", "ecd",
+                                  "laq"])
+def test_faulty_replay_trains_quadratic(name):
+    plan = faults.FaultPlan(N, seed=1, p_drop=0.1,
+                            crashes=((2, 2.0, 6.0),))
+    wl = cluster.quadratic_workload(n_workers=N)
+    tr = _schedule(name, _spec(), plan)
+    faults.validate(tr)
+    res = cluster.replay(tr, wl, lr=0.1, eval_every=1)
+    assert np.isfinite(res.losses).all()
+    assert res.final_loss < float(wl.eval_loss(wl.params0))
+
+
+def _acceptance(workload, *, rounds, lr, tol=2.0):
+    spec = _spec()
+    healthy = cluster.make_protocol("sync_ps").schedule(spec,
+                                                        rounds=rounds)
+    t_eq = healthy.makespan          # the equal-wall-clock point
+    ref = cluster.replay(healthy, workload, lr=lr, eval_every=1)
+    # the quorum run outpaces the barrier run (straggler cut), so anchor
+    # the crash window inside ITS span, not the healthy makespan's
+    t_q = cluster.make_protocol("sync_ps", quorum=N - 2).schedule(
+        spec, rounds=rounds, plan=faults.FaultPlan(N)).makespan
+    plan = faults.FaultPlan(
+        N, seed=0, p_drop=0.1,
+        crashes=((1, 0.25 * t_q, 0.5 * t_q),))
+
+    sync_q = cluster.make_protocol("sync_ps", quorum=N - 2).schedule(
+        spec, rounds=rounds, plan=plan)
+    tally = faults.validate(sync_q)   # exact accounting, or it throws
+    assert tally["dropped"] > 0 and tally["rejoins"] >= 1
+    res_s = cluster.replay(sync_q, workload, lr=lr, eval_every=1)
+
+    asyn = cluster.make_protocol("async_ps").schedule(spec, horizon=t_eq,
+                                                      plan=plan)
+    tally_a = faults.validate(asyn)
+    assert tally_a["dropped"] > 0 and tally_a["retried"] > 0
+    res_a = cluster.replay(
+        asyn, workload, lr=lr,
+        eval_every=max(asyn.n_updates // 20, 1))
+
+    ref_loss = ref.loss_at(t_eq)
+    assert res_s.loss_at(t_eq) <= tol * ref_loss, \
+        (res_s.loss_at(t_eq), ref_loss)
+    assert res_a.loss_at(t_eq) <= tol * ref_loss, \
+        (res_a.loss_at(t_eq), ref_loss)
+
+
+def test_acceptance_quadratic_survives_loss_and_crash():
+    """ACCEPTANCE: 10% drop + one crash-restart; sync-PS-with-quorum and
+    async-PS within 2x of the healthy loss at equal simulated
+    wall-clock, fault ledger exact."""
+    _acceptance(cluster.quadratic_workload(n_workers=N), rounds=10,
+                lr=0.1)
+
+
+def test_acceptance_lm_smoke_survives_loss_and_crash():
+    """ACCEPTANCE (repro-100m reduced LM variant)."""
+    _acceptance(cluster.lm_workload(smoke=True), rounds=3, lr=0.05)
