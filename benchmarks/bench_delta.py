@@ -28,6 +28,14 @@ silently, the way PR 2's 2.3x tree_encode_flat regression did.
 
 ``first_call_us`` is excluded: it is dominated by compile time, whose
 variance would drown the steady-state signal the gate exists for.
+``schema_version`` (and the string ``run_id``) are row identity stamps
+from ``repro.obs.runinfo``, not measurements, and are excluded too.
+
+Rows may GAIN metric fields over time (e.g. the telemetry tier adding
+columns): fresh-only metrics are announced with a ``::notice::`` and
+skipped — only metrics present in BOTH files gate. Metrics that vanish
+from the fresh file are announced the same way (a rename would
+otherwise silently stop gating).
 """
 from __future__ import annotations
 
@@ -42,7 +50,7 @@ DEFAULT_BASELINE = os.path.join(REPO, "BENCH_kernels_smoke.json")
 # identity fields, in display order; a row's key is whichever it carries
 KEY_FIELDS = ("op", "workload", "protocol", "scenario", "fig", "n",
               "regime")
-EXCLUDED_METRICS = {"first_call_us"}
+EXCLUDED_METRICS = {"first_call_us", "schema_version"}
 # bigger-is-better metrics regress DOWNWARD (a 2x drop in a speedup or a
 # throughput is the regression; a 2x rise is an improvement)
 HIGHER_IS_BETTER = ("_speedup", "_per_s", "updates")
@@ -76,7 +84,8 @@ def load(path: str) -> dict:
 
 def compare(baseline: dict, fresh: dict, threshold: float) -> list:
     """[(key, metric, base, fresh, ratio)] for every shared metric whose
-    fresh/baseline ratio exceeds the threshold."""
+    fresh/baseline ratio exceeds the threshold. Metrics present on only
+    one side never gate (rows are allowed to gain columns)."""
     regressions = []
     for key, row in fresh.items():
         if key not in baseline:
@@ -90,6 +99,22 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> list:
             if ratio > threshold:
                 regressions.append((key, name, base_v, fresh_v, ratio))
     return regressions
+
+
+def schema_drift(baseline: dict, fresh: dict) -> tuple:
+    """(fresh_only, baseline_only) metric names across the shared rows —
+    columns that appeared since the baseline was committed (tolerated,
+    announced) or disappeared from the fresh run (announced: a renamed
+    metric silently stops gating otherwise)."""
+    fresh_only: set = set()
+    base_only: set = set()
+    for key, row in fresh.items():
+        if key not in baseline:
+            continue
+        b, f = set(metrics(baseline[key])), set(metrics(row))
+        fresh_only |= f - b
+        base_only |= b - f
+    return sorted(fresh_only), sorted(base_only)
 
 
 def main() -> int:
@@ -123,6 +148,13 @@ def main() -> int:
         m, b, f = max(both, key=lambda t: regression_ratio(*t))
         print(f"{key:40s} worst={m:20s} base={b:12.4f} fresh={f:12.4f} "
               f"ratio={regression_ratio(m, b, f):5.2f}x")
+    fresh_only, base_only = schema_drift(baseline, fresh)
+    if fresh_only:
+        print(f"::notice::bench_delta: fresh-only metrics (tolerated, "
+              f"not gated): {', '.join(fresh_only)}")
+    if base_only:
+        print(f"::notice::bench_delta: metrics missing from fresh rows "
+              f"(no longer gated): {', '.join(base_only)}")
     regressions = compare(baseline, fresh, args.threshold)
     for key, m, b, f, ratio in regressions:
         print(f"::warning::bench regression: {key}:{m} {ratio:.2f}x over "

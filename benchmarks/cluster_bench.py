@@ -29,7 +29,7 @@ import json
 import math
 import os
 
-from repro import cluster
+from repro import cluster, obs
 from repro.cluster import faults
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
@@ -171,14 +171,32 @@ def run_failure_sweep(*, rounds: int, lr: float = 0.1,
     return rows
 
 
+def export_timeline(trace_out: str, *, rounds: int) -> None:
+    """Export the lossy sync-PS-quorum failure trace as a Perfetto
+    timeline (the ISSUE-8 demo scenario through the same code path the
+    sweeps run) — ``--trace-out`` turns this on."""
+    from repro.obs import export as obs_export
+
+    obs.enable()
+    obs.tracer().reset()
+    tr = obs_export.build_trace(protocol="sync_ps", rounds=rounds)
+    faults.validate(tr)
+    counts = obs_export.export_trace(tr, trace_out, into=obs.tracer())
+    print(f"# wrote {trace_out} ({counts['wire_spans']} wire spans, "
+          f"counts verified against the ledgers)")
+
+
 def main(smoke: bool = False, lm: bool = False,
-         out_path: str = OUT_PATH) -> str:
+         out_path: str = OUT_PATH, trace_out: str = "") -> str:
     rounds = 8 if smoke else 40
+    if trace_out:
+        export_timeline(trace_out, rounds=rounds)
     rows = run_quadratic_sweep(rounds=rounds)
     rows += run_failure_sweep(rounds=rounds)
     if lm or smoke:   # smoke always exercises the LM replay path (tiny)
         rows += run_lm_sweep(rounds=2 if smoke else rounds // 4,
                              smoke=smoke or not lm)
+    obs.stamp_rows(rows)
 
     print(f"# Virtual cluster: {N} workers, one {STRAGGLER_FACTOR:.0f}x "
           f"straggler, fused rq4 codec (time-to-loss at equal wall-clock)")
@@ -209,5 +227,10 @@ if __name__ == "__main__":
                     help="add the repro-100m LM sweep (reduced dims)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="where to write BENCH_cluster.json")
+    ap.add_argument("--trace-out", default="",
+                    help="also export the lossy sync-PS-quorum failure "
+                         "trace as a Perfetto timeline JSON (enables "
+                         "repro.obs)")
     args = ap.parse_args()
-    main(smoke=args.smoke, lm=args.lm, out_path=args.out)
+    main(smoke=args.smoke, lm=args.lm, out_path=args.out,
+         trace_out=args.trace_out)

@@ -13,6 +13,7 @@ import argparse
 import json
 import os
 
+from repro import obs
 from repro.core import eventsim, mixing
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
@@ -114,6 +115,7 @@ def main(smoke: bool = False, out_path: str = OUT_PATH):
     payload.append({"fig": "4.1/4.2", "sync_updates_per_s": round(sync, 4),
                     "async_updates_per_s": round(asyn, 4),
                     "max_staleness": stale})
+    obs.stamp_rows(payload)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -40,6 +40,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.flash_attn import ops as fa_ops
 from repro.kernels.quant import ops as q_ops
 from repro.kernels.wkv6 import ops as wkv_ops
@@ -205,6 +206,7 @@ def main(smoke: bool = False, out_path: str = OUT_PATH,
             if name.startswith("tree_encode_flat") and speedup:
                 row["flat_vs_perleaf_speedup"] = round(speedup, 3)
             payload.append(row)
+        obs.stamp_rows(payload)
         with open(out_path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")

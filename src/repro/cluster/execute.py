@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cluster.scheduler import Trace
 from repro.core import compression
 
@@ -198,9 +199,23 @@ def replay(trace: Trace, workload: Workload, *, codec: str = "rq4",
                "dcd": _replay_dcd, "ecd": _replay_ecd, "laq": _replay_laq}
     if trace.protocol not in replays:
         raise KeyError(f"no replay for protocol '{trace.protocol}'")
-    ts, losses = replays[trace.protocol](
-        trace, workload, qgrad, lr=lr, eval_every=eval_every, n=n,
-        wkey=wkey, mixing_w=mixing_w, qmodel=qmodel)
+    with obs.span(f"replay.{trace.protocol}",
+                  args={"workload": workload.name, "codec": codec,
+                        "n_workers": n}):
+        ts, losses = replays[trace.protocol](
+            trace, workload, qgrad, lr=lr, eval_every=eval_every, n=n,
+            wkey=wkey, mixing_w=mixing_w, qmodel=qmodel)
+    if obs.enabled("metrics"):
+        p = trace.protocol
+        obs.counter("replay.updates", protocol=p).inc(trace.n_updates)
+        obs.gauge("replay.final_loss", protocol=p,
+                  workload=workload.name).set(float(losses[-1]))
+        obs.histogram("replay.eval_loss", protocol=p,
+                      workload=workload.name).observe_many(
+                          float(v) for v in losses)
+    obs.flight_record("replay.done", protocol=trace.protocol,
+                      workload=workload.name, codec=codec,
+                      final_loss=float(losses[-1]), n_evals=len(losses))
     return ClusterRunResult(trace.protocol, np.asarray(ts),
                             np.asarray(losses, dtype=float),
                             trace.n_updates, trace.max_staleness,

@@ -46,6 +46,8 @@ from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+from repro.obs import flight as obs_flight
 from repro.core import eventsim
 
 INF = float("inf")
@@ -409,6 +411,13 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
                 statuses[(m.src, m.dst, tag)] = "lost"
                 ledger.drops.append(DropRecord(t_req, m.src, m.dst,
                                                m.size, m.tag, attempt))
+                if obs.enabled("metrics"):
+                    obs.counter("faults.dropped_msgs",
+                                reliable=reliable).inc()
+                    obs.counter("faults.dropped_mb").inc(m.size)
+                obs_flight.record("faults.drop", t=t_req, src=m.src,
+                                  dst=m.dst, tag=m.tag, attempt=attempt,
+                                  reliable=reliable)
                 if not reliable:
                     break
                 attempt += 1
@@ -416,6 +425,8 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
                                                   m.tag, attempt))
                 t_req = t_req + est_cost + plan.retry_wait(attempt)
                 continue
+            if attempt > 0 and obs.enabled("metrics"):
+                obs.counter("faults.retried_msgs").inc(attempt)
             delivered[(m.src, m.dst, m.tag)] = tag
             if plan.dups_msg(m.src, m.dst, m.tag, attempt):
                 dtag = tag + "~dup"
@@ -454,10 +465,20 @@ def collect_quorum(arrivals: Sequence, *, t_start: float,
         if t_end > t_agg:
             ledger.timeouts.append(TimeoutRecord(round_idx, w, t_agg,
                                                  t_end))
+            if obs.enabled("metrics"):
+                obs.counter("faults.quorum_cuts").inc()
+                obs.histogram("faults.quorum_wait_s").observe(
+                    t_end - t_agg)
+            obs_flight.record("faults.quorum_cut", round=round_idx,
+                              worker=w, t_cut=t_agg, t_arrival=t_end)
     if quorum is not None and len(contributors) < quorum:
         ledger.shortfalls.append(QuorumShortfall(round_idx,
                                                  len(contributors),
                                                  quorum))
+        if obs.enabled("metrics"):
+            obs.counter("faults.quorum_shortfalls").inc()
+        obs_flight.record("faults.quorum_shortfall", round=round_idx,
+                          got=len(contributors), wanted=quorum)
     return t_agg, contributors
 
 
@@ -516,8 +537,22 @@ def validate(trace) -> dict:
       * delivered = attempted - lost (nothing unaccounted);
       * every update event lands at or before the makespan.
 
-    Returns the tally so tests/benchmarks can publish it.
+    Returns the tally so tests/benchmarks can publish it. When the
+    flight recorder is enabled, a failed assertion dumps the ring buffer
+    (``flight_faults_validate.json``) before re-raising — the forged-
+    ledger class of bug leaves its recent history on disk.
     """
+    try:
+        return _validate(trace)
+    except AssertionError as e:
+        obs_flight.record("faults.validate_failed", error=str(e),
+                          protocol=trace.protocol)
+        obs_flight.dump_on_failure("faults.validate",
+                                   f"AssertionError: {e}")
+        raise
+
+
+def _validate(trace) -> dict:
     led = trace.faults if trace.faults is not None else FaultLedger()
 
     def base(tag: str) -> str:

@@ -44,10 +44,61 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+from repro.obs import flight as obs_flight
 from repro.cluster import faults as F
 from repro.core import eventsim
 
 PS = -1   # symbolic parameter-server id in TraceEvents (msgs use index n)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry taps (no-ops unless repro.obs is enabled; see obs/state.py)
+# ---------------------------------------------------------------------------
+
+
+def _span_compute(worker: int, step: int, t0: float, t1: float) -> None:
+    """Live compute span for the timeline — the one row the wire/fault
+    ledgers cannot reconstruct post-hoc. Callers guard on
+    ``obs.enabled("trace")`` so the off path stays one dict lookup."""
+    obs.tracer().sim_span("compute", worker=worker, lane="compute",
+                          t0=t0, t1=t1, cat="sim,compute",
+                          args={"step": step})
+
+
+def _observe_trace(trace: Trace) -> Trace:
+    """Metrics/flight tap every ``schedule_*`` return passes through."""
+    if obs.enabled("metrics"):
+        p = trace.protocol
+        obs.counter("cluster.traces", protocol=p).inc()
+        obs.gauge("cluster.makespan_s", protocol=p).set(trace.makespan)
+        stale = obs.histogram("cluster.staleness", protocol=p)
+        n_updates = 0
+        for e in trace.events:
+            if e.kind == "update":
+                n_updates += 1
+                stale.observe(e.staleness)
+        obs.counter("cluster.updates", protocol=p).inc(n_updates)
+        by_status: dict = {}
+        mb = 0.0
+        for d in trace.comm:
+            s = getattr(d, "status", "ok")
+            by_status[s] = by_status.get(s, 0) + 1
+            mb += d.size
+        for s, c in by_status.items():
+            obs.counter("cluster.wire_msgs", protocol=p, status=s).inc(c)
+        obs.counter("cluster.wire_mb", protocol=p).inc(mb)
+        led = trace.faults
+        if led is not None:
+            for name, v in led.summary().items():
+                obs.counter(f"cluster.faults.{name}", protocol=p).inc(v)
+    if obs.enabled("flight"):
+        obs.flight_record("scheduler.trace", protocol=trace.protocol,
+                          n_workers=trace.n_workers,
+                          makespan=trace.makespan,
+                          n_events=len(trace.events),
+                          n_comm=len(trace.comm))
+    return trace
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +272,7 @@ def _ring_allreduce_round(spec: ClusterSpec, t0: float,
     return eventsim.simulate(msgs, t_lat=spec.t_lat, t_tr=spec.t_tr)
 
 
+@obs_flight.guarded("scheduler.sync_ps")
 def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1,
                      plan: Optional[F.FaultPlan] = None,
                      timeout: Optional[float] = None,
@@ -260,6 +312,12 @@ def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1,
     recs: list = []
     for r in range(rounds):
         done = [t + spec.compute_time(w, r) for w in range(n)]
+        if obs.enabled("trace"):
+            for w in range(n):
+                _span_compute(w, r, t, done[w])
+        if obs.enabled("metrics"):
+            obs.histogram("cluster.straggler_lag_s",
+                          protocol="sync_ps").observe(max(done) - min(done))
         if spec.allreduce == "ring":
             res = _ring_allreduce_round(spec, max(done), r)
             comm += list(res.deliveries)
@@ -287,11 +345,12 @@ def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1,
         version += 1
         t = down.makespan
         events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
-    return Trace("sync_ps", n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t,
-                 (("rounds", rounds), ("allreduce", spec.allreduce)))
+    return _observe_trace(Trace(
+        "sync_ps", n, _sorted_events(events), tuple(comm), tuple(recs), t,
+        (("rounds", rounds), ("allreduce", spec.allreduce))))
 
 
+@obs_flight.guarded("scheduler.local_sgd")
 def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
                        rounds: int = 1,
                        plan: Optional[F.FaultPlan] = None,
@@ -322,7 +381,10 @@ def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
         for h in range(period_h):
             step = r * period_h + h
             for w in range(n):
+                t_h0 = done[w]
                 done[w] += spec.compute_time(w, step)
+                if obs.enabled("trace"):
+                    _span_compute(w, step, t_h0, done[w])
                 events.append(TraceEvent("update", w, step, version,
                                          version, 0, done[w]))
         if spec.allreduce == "ring":
@@ -344,12 +406,13 @@ def schedule_local_sgd(spec: ClusterSpec, *, period_h: int = 8,
             t = down.makespan
         version += 1
         events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
-    return Trace("local_sgd", n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t,
-                 (("rounds", rounds), ("period_h", period_h),
-                  ("allreduce", spec.allreduce)))
+    return _observe_trace(Trace(
+        "local_sgd", n, _sorted_events(events), tuple(comm), tuple(recs),
+        t, (("rounds", rounds), ("period_h", period_h),
+            ("allreduce", spec.allreduce))))
 
 
+@obs_flight.guarded("scheduler.decentralized")
 def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,
                            w: Optional[np.ndarray] = None,
                            codec: Optional[str] = None,
@@ -403,6 +466,8 @@ def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,
     for r in range(rounds):
         done = [t + spec.compute_time(i, r) for i in range(n)]
         for i in range(n):
+            if obs.enabled("trace"):
+                _span_compute(i, r, t, done[i])
             events.append(TraceEvent("update", i, r, r, r, 0, done[i]))
         res = eventsim.simulate(
             [eventsim.Msg(done[i], i, j, s, f"gossip{r}", spec.n_messages)
@@ -415,10 +480,10 @@ def schedule_decentralized(spec: ClusterSpec, *, rounds: int = 1,
     # the trace carries W itself (nested tuple) so the replay mixes with
     # exactly the matrix whose comm cost was charged here; compressed
     # protocols also carry the codec their messages were sized with
-    return Trace(protocol, n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t,
-                 (("rounds", rounds), ("degree", mixing.degree(w_mat)),
-                  ("w", w_rows), ("codec", codec)))
+    return _observe_trace(Trace(
+        protocol, n, _sorted_events(events), tuple(comm), tuple(recs), t,
+        (("rounds", rounds), ("degree", mixing.degree(w_mat)),
+         ("w", w_rows), ("codec", codec))))
 
 
 def _schedule_decentralized_faulty(spec: ClusterSpec, *, rounds: int,
@@ -490,6 +555,8 @@ def _schedule_decentralized_faulty(spec: ClusterSpec, *, rounds: int,
                 led.lost_compute.append((w, t_ready[w]))
                 has_state.discard(w)
                 continue
+            if obs.enabled("trace"):
+                _span_compute(w, r, t_ready[w], d)
             participants.append(w)
             done[w] = d
         # -- membership epoch: re-derive + re-validate W over the live set
@@ -517,16 +584,17 @@ def _schedule_decentralized_faulty(spec: ClusterSpec, *, rounds: int,
         present_rounds.append(tuple(participants))
         rejoin_rounds.append(tuple(rejoin_pairs))
         dropped_rounds.append(dropped)
-    return Trace(protocol, n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t,
-                 (("rounds", rounds), ("degree", mixing.degree(w_mat)),
-                  ("w", w_rows), ("codec", codec),
-                  ("present", tuple(present_rounds)),
-                  ("rejoiners", tuple(rejoin_rounds)),
-                  ("dropped_edges", tuple(dropped_rounds))),
-                 led.freeze())
+    return _observe_trace(Trace(
+        protocol, n, _sorted_events(events), tuple(comm), tuple(recs), t,
+        (("rounds", rounds), ("degree", mixing.degree(w_mat)),
+         ("w", w_rows), ("codec", codec),
+         ("present", tuple(present_rounds)),
+         ("rejoiners", tuple(rejoin_rounds)),
+         ("dropped_edges", tuple(dropped_rounds))),
+        led.freeze()))
 
 
+@obs_flight.guarded("scheduler.laq")
 def schedule_laq(spec: ClusterSpec, *, rounds: int = 1, skip: int = 2,
                  plan: Optional[F.FaultPlan] = None,
                  timeout: Optional[float] = None,
@@ -557,6 +625,9 @@ def schedule_laq(spec: ClusterSpec, *, rounds: int = 1, skip: int = 2,
     for r in range(rounds):
         senders = [w for w in range(n) if (r - w) % skip == 0]
         done = {w: t + spec.compute_time(w, r) for w in senders}
+        if obs.enabled("trace"):
+            for w in senders:
+                _span_compute(w, r, t, done[w])
         up = eventsim.simulate(
             [eventsim.Msg(done[w], w, ps, s, f"agg{r}", spec.n_messages)
              for w in senders], t_lat=spec.t_lat, t_tr=spec.t_tr)
@@ -577,8 +648,9 @@ def schedule_laq(spec: ClusterSpec, *, rounds: int = 1, skip: int = 2,
         version += 1
         t = down.makespan
         events.append(TraceEvent("sync", PS, r, version - 1, version, 0, t))
-    return Trace("laq", n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t, (("rounds", rounds), ("skip", skip)))
+    return _observe_trace(Trace(
+        "laq", n, _sorted_events(events), tuple(comm), tuple(recs), t,
+        (("rounds", rounds), ("skip", skip))))
 
 
 # ---------------------------------------------------------------------------
@@ -685,6 +757,11 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
                 led.lost_compute.append((w, t_ready[w]))
                 has_state.discard(w)    # crashed mid-compute
                 continue
+            if obs.enabled("trace"):
+                t_h0 = t_ready[w]
+                for h, t_h1 in enumerate(times):
+                    _span_compute(w, r * period_h + h, t_h0, t_h1)
+                    t_h0 = t_h1
             participants.append(w)
             step_times[w] = times
         if protocol == "local_sgd":
@@ -707,6 +784,11 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
             arrivals, t_start=t_start, timeout=timeout, quorum=quorum,
             ledger=led, round_idx=r)
         t_agg = max(t_agg, t_start)
+        if obs.enabled("metrics") and arrivals:
+            # how long the round would have waited past the quorum cut
+            obs.histogram("cluster.straggler_lag_s",
+                          protocol=protocol).observe(
+                              max(t_end for t_end, _ in arrivals) - t_agg)
         by_worker = dict((w, t_end) for t_end, w in arrivals)
         for w in contribs:
             if protocol == "sync_ps":
@@ -747,8 +829,9 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
         extras.append(("period_h", period_h))
     if protocol == "laq":
         extras.append(("skip", laq_skip))
-    return Trace(protocol, n, _sorted_events(events), tuple(comm),
-                 tuple(recs), t, tuple(extras), led.freeze())
+    return _observe_trace(Trace(protocol, n, _sorted_events(events),
+                                tuple(comm), tuple(recs), t,
+                                tuple(extras), led.freeze()))
 
 
 # ---------------------------------------------------------------------------
@@ -757,6 +840,7 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
 # ---------------------------------------------------------------------------
 
 
+@obs_flight.guarded("scheduler.async_ps")
 def schedule_async_ps(spec: ClusterSpec, *, horizon: float,
                       plan: Optional[F.FaultPlan] = None) -> Trace:
     """§4.1 async PS: each worker loops pull -> compute -> push with no
@@ -879,6 +963,8 @@ def schedule_async_ps(spec: ClusterSpec, *, horizon: float,
                 led.duplicates.append(F.DupRecord(t0 + msg, ps, w, base))
             versions_at_pull[w] = version
             t_next = t0 + msg + spec.compute_time(w, steps[w])
+            if obs.enabled("trace"):
+                _span_compute(w, steps[w], t0 + msg, t_next)
             heapq.heappush(q, (t_next, seq, "push", w, t0 + msg, 0))
         else:
             t0 = max(t, ps_recv_free)
@@ -927,6 +1013,7 @@ def schedule_async_ps(spec: ClusterSpec, *, horizon: float,
     assert n_ok_push == n_updates, (n_ok_push, n_updates)
     assert len(recs) == len(comm) * spec.n_messages
     makespan = max((e.t_wall for e in events), default=0.0)
-    return Trace("async_ps", n, _sorted_events(events), tuple(comm),
-                 tuple(recs), makespan, (("horizon", horizon),),
-                 led.freeze() if plan is not None else None)
+    return _observe_trace(Trace(
+        "async_ps", n, _sorted_events(events), tuple(comm), tuple(recs),
+        makespan, (("horizon", horizon),),
+        led.freeze() if plan is not None else None))

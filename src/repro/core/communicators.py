@@ -39,16 +39,32 @@ servers of their FSDP partition); see train/steps.py.
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
+from functools import lru_cache, wraps
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core import compression
 
 PyTree = Any
+
+
+def _sized(fn):
+    """Metrics tap on every ``message_bytes`` sizing call: the measured
+    per-iteration wire bytes one worker pays under this exchange, by
+    exchange name (host-side sizing only — never runs inside jit)."""
+    @wraps(fn)
+    def wrapper(self, tree, **kw):
+        b = fn(self, tree, **kw)
+        if obs.enabled("metrics"):
+            obs.gauge("comm.message_bytes", exchange=self.name).set(b)
+            obs.counter("comm.sized_total_bytes",
+                        exchange=self.name).inc(b)
+        return b
+    return wrapper
 
 
 def _tree_map2(fn, a, b):
@@ -96,6 +112,7 @@ class MbSGDExchange:
                  axis_name: str) -> tuple[PyTree, PyTree]:
         return lax.pmean(grad, axis_name), state
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
         """Uplink + broadcast share, fp32 — same multi-server-PS
         convention as the compressed exchanges so the columns compare."""
@@ -145,6 +162,7 @@ class CSGDPSExchange:
         out = cdc.tree_qdq(mean_q, skey)
         return out, state
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
         """One worker->server message + this worker's share of the
         broadcast (in the multi-server view each worker also serves its
@@ -308,6 +326,7 @@ class CSGDRingExchange:
         out = cdc.flat_decode_partitioned(packed) / n
         return layout.unflatten(out), state
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 2) -> float:
         """Partitioned: 2(n-1) partition messages per iteration
         (= 2*M*(n-1)/n + pad/header overhead); monolithic: n-1 hops of
@@ -388,6 +407,7 @@ class ECSGDExchange:
         new_server_err = _tree_map2(lambda a, b: a - b, v, out)
         return out, {"worker_err": new_worker_err, "server_err": new_server_err}
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
         """As CSGDPSExchange: worker->server + broadcast share."""
         del n_workers
@@ -497,6 +517,7 @@ class DelayedExchange:
         return stale, {"inner": inner_state, "buffer": buf,
                        "head": step + 1}
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 1) -> float:
         return self.inner.message_bytes(tree, n_workers=n_workers)
 
@@ -600,6 +621,7 @@ class GossipMix:
 
         return jax.tree_util.tree_map(mix, params)
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 3) -> float:
         """Full fp32 model to each neighbor: deg(W) sends per mix — 2 on
         the ring (both directions), 4 on the torus, n-1 under W1."""
@@ -758,6 +780,7 @@ class DCDGossipExchange:
             new_state["err"] = v - q
         return layout.unflatten(new_xhat), new_state
 
+    @_sized
     def message_bytes(self, tree, *, n_workers: int = 3) -> float:
         """deg(W) compressed-delta messages per mix: each neighbor gets
         ONE fused flat message (payload + params header), vs GossipMix's

@@ -70,6 +70,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionSpec:
@@ -380,11 +382,28 @@ class Codec:
     def wire_bytes(self, x) -> float:
         """Measured wire bytes for one leaf (array / ShapeDtypeStruct)."""
         if not self.packable:
-            return self.spec.compressed_bytes(x.size)
-        leaf = jax.ShapeDtypeStruct(x.shape, getattr(x, "dtype", jnp.float32))
-        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-        out = jax.eval_shape(self.encode, leaf, key)
-        return float(out.wire_bytes)
+            b = self.spec.compressed_bytes(x.size)
+        else:
+            leaf = jax.ShapeDtypeStruct(x.shape,
+                                        getattr(x, "dtype", jnp.float32))
+            key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            out = jax.eval_shape(self.encode, leaf, key)
+            b = float(out.wire_bytes)
+        self._observe_wire(b, x.size, tier="leaf")
+        return b
+
+    def _observe_wire(self, wire_b: float, n_elements: int, *,
+                      tier: str) -> None:
+        """Metrics tap on every host-side wire sizing (not in jit)."""
+        if not obs.enabled("metrics"):
+            return
+        obs.counter("compression.wire_bytes", codec=self.name,
+                    tier=tier).inc(wire_b)
+        obs.counter("compression.sized_msgs", codec=self.name,
+                    tier=tier).inc()
+        if wire_b > 0:
+            obs.histogram("compression.ratio", codec=self.name).observe(
+                4.0 * n_elements / wire_b)
 
     def wire_bytes_for(self, n_elements: int) -> float:
         """Measured wire bytes for a flat fp32 message of n elements."""
@@ -450,13 +469,16 @@ class Codec:
         layout = FlatLayout.from_tree(tree)
         if not self.packable:
             # one message -> one static-spec header, not one per leaf
-            return self.spec.compressed_bytes(layout.total)
-        flat = jax.ShapeDtypeStruct((layout.total,), jnp.float32)
-        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-        out = jax.eval_shape(
-            partial(self.flat_encode, layout=layout,
-                    bucket_elems=bucket_elems), flat, key)
-        return float(out.wire_bytes)
+            b = self.spec.compressed_bytes(layout.total)
+        else:
+            flat = jax.ShapeDtypeStruct((layout.total,), jnp.float32)
+            key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            out = jax.eval_shape(
+                partial(self.flat_encode, layout=layout,
+                        bucket_elems=bucket_elems), flat, key)
+            b = float(out.wire_bytes)
+        self._observe_wire(b, layout.total, tier="flat")
+        return b
 
     def tree_wire_bytes_partitioned(self, tree, n_parts: int, *,
                                     bucket_elems: int = DEFAULT_BUCKET_ELEMS
@@ -630,7 +652,19 @@ class QuantCodec(Codec):
         payload, params = ops.encode_flat(flat, key, bits=self.bits,
                                           bucket_elems=bucket_elems,
                                           backend=self.backend)
+        self._observe_buckets(params)
         return FlatPacked(payload, params, layout, self.name, bucket_elems)
+
+    def _observe_buckets(self, params) -> None:
+        """Per-bucket quant range tap. ``params`` is the encode output
+        ((n_buckets, 2) of (lo, scale)) — concrete on the host path,
+        a tracer inside jit (where ``observe_array`` skips it; the
+        caller sees the concrete params as the jitted function's output
+        and can feed them back if it wants in-jit coverage)."""
+        if obs.enabled("metrics"):
+            levels = (1 << self.bits) - 1
+            obs.observe_array("quant.bucket_range",
+                              params[:, 1] * levels, codec=self.name)
 
     def flat_decode(self, packed: FlatPacked):
         from repro.kernels.quant import ops
@@ -660,6 +694,7 @@ class QuantCodec(Codec):
         payload, params = _tree_encode_flat_fused(
             tree, key, layout=layout, bits=self.bits,
             bucket_elems=bucket_elems, backend=self.backend)
+        self._observe_buckets(params)
         return FlatPacked(payload, params, layout, self.name, bucket_elems)
 
     def tree_decode_flat(self, packed: FlatPacked):

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.obs import flight as obs_flight
 from repro.kernels.flash_attn import kernel
 
 # Retuned for the skip-grid kernel (see kernel.py docstring): an
@@ -27,6 +28,7 @@ def _interpret() -> bool:
 
 @partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                    "block_q", "block_k", "skip"))
+@obs_flight.kernel_annotation("flash_attn.forward")
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     softcap: float = 0.0, block_q: int = DEFAULT_BLOCK_Q,
                     block_k: int = DEFAULT_BLOCK_K,

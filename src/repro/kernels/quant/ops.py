@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.obs import flight as obs_flight
 from repro.kernels.quant import kernel, ref
 
 LANES = 512
@@ -82,6 +83,7 @@ def _params_for(x: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 @partial(jax.jit, static_argnames=("bits", "backend"))
+@obs_flight.kernel_annotation("quant.qdq")
 def quantize_dequantize(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
                         backend: str = "auto") -> jnp.ndarray:
     """Fused Q(x) with stochastic rounding; same statistics as
@@ -105,6 +107,7 @@ def quantize_dequantize(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
 
 
 @partial(jax.jit, static_argnames=("bits", "backend"))
+@obs_flight.kernel_annotation("quant.encode")
 def encode(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
            backend: str = "auto"):
     """Returns (payload uint8 (R, 512), params (1, 2)).
@@ -128,6 +131,7 @@ def encode(x: jnp.ndarray, key: jax.Array, *, bits: int = 8,
 
 
 @partial(jax.jit, static_argnames=("bits", "shape", "dtype", "backend"))
+@obs_flight.kernel_annotation("quant.decode")
 def decode(payload: jnp.ndarray, params: jnp.ndarray, *, shape: tuple,
            bits: int = 8, dtype=jnp.float32, backend: str = "auto"):
     """Unpack + dequantize a wire payload back to `shape`."""
@@ -327,6 +331,7 @@ def _write_head_tail(head, tail, out_shape, dtype):
     return lax.dynamic_update_slice(out, tail.astype(dtype), off)
 
 
+@obs_flight.kernel_annotation("quant.qdq_flat")
 def _qdq_flat_impl(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
                    bucket_elems: int = DEFAULT_BUCKET_ELEMS,
                    backend: str = "auto") -> jnp.ndarray:
@@ -429,6 +434,7 @@ def encode_flat_blocked(leaves, offsets, total: int, key, *, bits: int = 8,
 
 
 @partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
+@obs_flight.kernel_annotation("quant.encode_flat")
 def encode_flat(flat: jnp.ndarray, key: jax.Array, *, bits: int = 8,
                 bucket_elems: int = DEFAULT_BUCKET_ELEMS,
                 backend: str = "auto"):
@@ -533,6 +539,7 @@ def encode_partitioned_blocked(leaves, offsets, total: int, key, *,
 
 @partial(jax.jit, static_argnames=("bits", "total", "bucket_elems",
                                    "backend"))
+@obs_flight.kernel_annotation("quant.decode_flat")
 def decode_flat(payload: jnp.ndarray, params: jnp.ndarray, *, total: int,
                 bits: int = 8, bucket_elems: int = DEFAULT_BUCKET_ELEMS,
                 backend: str = "auto") -> jnp.ndarray:
@@ -588,6 +595,7 @@ def _dae_ref(payload, params, x4, u4, *, bits: int):
 
 
 @partial(jax.jit, static_argnames=("bits", "bucket_elems", "backend"))
+@obs_flight.kernel_annotation("quant.decode_add_encode_flat")
 def decode_add_encode_flat(payload: jnp.ndarray, params: jnp.ndarray,
                            local: jnp.ndarray, key: jax.Array, *,
                            bits: int = 8,
