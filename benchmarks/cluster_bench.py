@@ -142,6 +142,18 @@ def run_failure_sweep(*, rounds: int, lr: float = 0.1,
                       joins=((N - 2, 0.6 * t_healthy),), p_drop=0.05,
                       seed=0),
          [("dsgd", {})]),
+        # PR-9 corruption / Byzantine tier: CRC-detected bit-flips +
+        # NaN poison absorbed by the quorum, and the f=2 sign-flip
+        # roster under the naive mean vs the robust trimmed mean
+        ("corrupt_wire",
+         faults.corrupt_wire(N, p_corrupt=0.1, p_poison=0.02, seed=0),
+         [("sync_ps", {"quorum": 6})]),
+        ("byzantine_mean",
+         faults.byzantine_workers(N, f=2, mode="sign_flip", seed=0),
+         [("sync_ps", {"aggregator": "mean"})]),
+        ("byzantine_trimmed",
+         faults.byzantine_workers(N, f=2, mode="sign_flip", seed=0),
+         [("sync_ps", {"aggregator": "trimmed_mean"})]),
     ]
     rows = []
     for scenario, plan, protos in scenarios:
@@ -167,6 +179,7 @@ def run_failure_sweep(*, rounds: int, lr: float = 0.1,
                 "timed_out": tally["timed_out"],
                 "rejoins": tally["rejoins"],
                 "epochs": tally["epochs"],
+                "corrupted": tally["corrupted"],
             })
     return rows
 

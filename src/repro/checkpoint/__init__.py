@@ -1,3 +1,6 @@
-from repro.checkpoint.npz import latest_checkpoint, load_state, save_state
+from repro.checkpoint.npz import (CheckpointCorruptionError,
+                                  latest_checkpoint, load_state,
+                                  save_state)
 
-__all__ = ["save_state", "load_state", "latest_checkpoint"]
+__all__ = ["CheckpointCorruptionError", "save_state", "load_state",
+           "latest_checkpoint"]

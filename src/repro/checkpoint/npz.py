@@ -14,12 +14,21 @@ leave a half-written ``step-*.npz`` — a reader sees the previous complete
 checkpoint or the new one, nothing in between. ``load_state`` validates
 the archive and raises ``ValueError`` on truncated/corrupt files instead
 of deserializing garbage.
+
+Integrity: ``save_state`` stores a CRC32 companion entry
+(``__crc__<key>``) per array, and ``load_state`` verifies each checksum
+against the raw stored bytes BEFORE any dtype/view conversion — a
+silently bit-flipped leaf (disk rot, a bad donor in the decentralized
+rejoin path) raises a ``ValueError`` naming the file and the array
+instead of training on garbage. Archives written without checksums
+(older checkpoints) still load.
 """
 from __future__ import annotations
 
 import os
 import tempfile
 import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -29,6 +38,19 @@ import numpy as np
 PyTree = Any
 
 _BF16_PREFIX = "__bf16__"
+_CRC_PREFIX = "__crc__"
+
+
+class CheckpointCorruptionError(ValueError):
+    """A stored array's bytes disagree with its CRC32 companion entry —
+    the archive itself is well-formed zip, but a leaf was bit-flipped
+    after the write (disk rot, a bad donor copy)."""
+
+
+def _crc32(arr: np.ndarray) -> np.ndarray:
+    """The array's CRC32 over its raw bytes, as a storable uint32."""
+    return np.uint32(zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                     & 0xFFFFFFFF)
 
 
 def _path_str(path) -> str:
@@ -53,6 +75,7 @@ def save_state(state: PyTree, directory: str, *, step: int = 0) -> str:
             key = _BF16_PREFIX + key
             arr = arr.view(np.uint16)
         flat[key] = arr
+        flat[_CRC_PREFIX + key] = _crc32(arr)
     fname = os.path.join(directory, f"step-{step:08d}.npz")
     # write-then-rename: the temp file lives in the target directory so
     # os.replace is an atomic same-filesystem rename
@@ -85,15 +108,26 @@ def load_state(template: PyTree, fname: str) -> PyTree:
     by_key: dict[str, np.ndarray] = {}
     try:
         data = np.load(fname)
+        crcs = {key[len(_CRC_PREFIX):]: int(data[key])
+                for key in data.files if key.startswith(_CRC_PREFIX)}
         for key in data.files:
+            if key.startswith(_CRC_PREFIX):
+                continue
             # materialize every member here: a truncated zip member
             # surfaces while we still know which file to blame
+            arr = data[key]
+            # checksum the raw stored bytes before any view conversion;
+            # archives without __crc__ entries (pre-integrity) still load
+            if key in crcs and int(_crc32(arr)) != crcs[key]:
+                raise CheckpointCorruptionError(
+                    f"checksum mismatch in checkpoint {fname!r}: array "
+                    f"{key!r} is corrupt (stored CRC32 {crcs[key]:#010x}"
+                    f" != computed {int(_crc32(arr)):#010x})")
             if key.startswith(_BF16_PREFIX):
-                by_key[key[len(_BF16_PREFIX):]] = \
-                    data[key].view(jnp.bfloat16)
+                by_key[key[len(_BF16_PREFIX):]] = arr.view(jnp.bfloat16)
             else:
-                by_key[key] = data[key]
-    except FileNotFoundError:
+                by_key[key] = arr
+    except (FileNotFoundError, CheckpointCorruptionError):
         raise
     except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
         raise ValueError(

@@ -13,13 +13,18 @@ real async / local-SGD / decentralized training.
   faults.py     seeded deterministic fault injection (FaultPlan) +
                 the fault ledger, quorum/timeout aggregation, and the
                 live-set mixing-matrix re-derivation every protocol's
-                graceful degradation builds on.
+                graceful degradation builds on; now also the corruption
+                class (bit-flips, NaN poison, Byzantine workers).
+  aggregators.py  Byzantine-robust PS aggregation registry (mean /
+                norm_clip / trimmed_mean / coordinate_median).
 """
+from repro.cluster.aggregators import AGGREGATORS, aggregator
 from repro.cluster.execute import (ClusterRunResult, Workload,
                                    lm_workload, quadratic_workload, replay)
-from repro.cluster.faults import (FaultLedger, FaultPlan, churn,
-                                  crash_restart, live_mixing_matrix,
-                                  lossy_network)
+from repro.cluster.faults import (FaultLedger, FaultPlan,
+                                  byzantine_workers, churn,
+                                  corrupt_wire, crash_restart,
+                                  live_mixing_matrix, lossy_network)
 from repro.cluster.faults import validate as validate_trace
 from repro.cluster.protocols import (PROTOCOLS, make_protocol,
                                      staleness_schedule)
@@ -27,8 +32,9 @@ from repro.cluster.scheduler import (ClusterSpec, Trace, TraceEvent,
                                      straggler_multipliers)
 
 __all__ = [
-    "ClusterRunResult", "ClusterSpec", "FaultLedger", "FaultPlan",
-    "PROTOCOLS", "Trace", "TraceEvent", "Workload", "churn",
+    "AGGREGATORS", "ClusterRunResult", "ClusterSpec", "FaultLedger",
+    "FaultPlan", "PROTOCOLS", "Trace", "TraceEvent", "Workload",
+    "aggregator", "byzantine_workers", "churn", "corrupt_wire",
     "crash_restart", "live_mixing_matrix", "lm_workload", "lossy_network",
     "make_protocol", "quadratic_workload", "replay", "staleness_schedule",
     "straggler_multipliers", "validate_trace",

@@ -1,0 +1,141 @@
+"""Byzantine-robust aggregation rules for the sync-PS quorum step.
+
+The PS's mean is a single point of statistical failure: one worker
+shipping ``-g`` (or ``8g``, or noise) moves the aggregate by design —
+compression and the wire CRC cannot help, because an adversarial payload
+frames perfectly. The classical defense is to replace the mean with a
+rule whose breakdown point tolerates ``f`` bad rows out of ``n``:
+
+  mean               the baseline (breakdown 0) — bit-identical to the
+                     masked average the quorum replay always used.
+  norm_clip          rows are scaled down to the masked median gradient
+                     norm before averaging: defeats large-norm attacks
+                     (``scale`` mode), not directional ones.
+  trimmed_mean       per coordinate, drop the f smallest and f largest
+                     contributions and average the rest (f = n // 4,
+                     at least 1): tolerates f arbitrary rows.
+  coordinate_median  per coordinate, the masked median: breakdown 1/2,
+                     the most conservative rule here.
+
+Every rule is mask-aware — ``mask`` is the (n,) 0/1 float row mask of
+quorum contributors, so excluded uplinks (lost, corrupted, timed out)
+never touch the statistic — and every rule is pure jnp on the stacked
+worker axis, usable inside the jitted replay round step. An empty mask
+yields a zero update (the round carries the previous params), matching
+the scheduler's ``QuorumShortfall`` semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# sorts masked-out rows past every real fp32 gradient without the NaN
+# semantics of +inf arithmetic
+_BIG = 3.0e38
+
+
+def _bcast(mask: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    return mask.reshape((mask.shape[0],) + (1,) * (q.ndim - 1))
+
+
+def _count_scale(mask: jnp.ndarray) -> tuple:
+    count = mask.sum()
+    scale = jnp.where(count > 0, 1.0 / jnp.maximum(count, 1.0), 0.0)
+    return count, scale
+
+
+def mean(q_w, mask: jnp.ndarray):
+    """Masked average — exactly the quorum replay's original arithmetic
+    (the default rule must stay bit-identical to the pre-registry
+    path)."""
+    count, scale = _count_scale(mask)
+    del count
+    return jax.tree_util.tree_map(
+        lambda q: (q * _bcast(mask, q)).sum(0) * scale, q_w)
+
+
+def _masked_sort(q: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Ascending per-coordinate sort with masked-out rows pushed past
+    the top (the first ``count`` rows are the real values)."""
+    return jnp.sort(jnp.where(_bcast(mask, q) > 0, q, _BIG), axis=0)
+
+
+def _take_row(s: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Row ``idx`` (a traced scalar) of the sorted (n, ...) stack."""
+    i = jnp.broadcast_to(idx.astype(jnp.int32).reshape((1,) * s.ndim),
+                         (1,) + s.shape[1:])
+    return jnp.take_along_axis(s, i, axis=0)[0]
+
+
+def trimmed_mean(q_w, mask: jnp.ndarray):
+    """Per coordinate, drop the ``f`` smallest and ``f`` largest masked
+    contributions (f = n//4, at least 1) and average the middle; falls
+    back to the masked mean when fewer than ``2f + 1`` rows survive."""
+    n = mask.shape[0]
+    f = max(1, n // 4)
+    count, _ = _count_scale(mask)
+
+    def leaf(q):
+        s = _masked_sort(q, mask)
+        idx = jnp.arange(n).reshape((n,) + (1,) * (q.ndim - 1))
+        keep = (idx >= f) & (idx < count - f)
+        kept = jnp.where(keep, s, 0.0).sum(0)
+        robust = kept / jnp.maximum(count - 2 * f, 1.0)
+        _, scale = _count_scale(mask)
+        fallback = (q * _bcast(mask, q)).sum(0) * scale
+        return jnp.where(count > 2 * f, robust, fallback)
+
+    return jax.tree_util.tree_map(leaf, q_w)
+
+
+def coordinate_median(q_w, mask: jnp.ndarray):
+    """Per-coordinate masked median (even counts average the two middle
+    values) — breakdown point 1/2; an empty mask yields zero."""
+    count, _ = _count_scale(mask)
+    cnt = count.astype(jnp.int32)
+
+    def leaf(q):
+        s = _masked_sort(q, mask)
+        n = mask.shape[0]
+        lo = jnp.clip((cnt - 1) // 2, 0, n - 1)
+        hi = jnp.clip(cnt // 2, 0, n - 1)
+        med = 0.5 * (_take_row(s, lo) + _take_row(s, hi))
+        return jnp.where(count > 0, med, 0.0)
+
+    return jax.tree_util.tree_map(leaf, q_w)
+
+
+def norm_clip(q_w, mask: jnp.ndarray):
+    """Clip each contribution's GLOBAL (whole-tree) norm to the masked
+    median norm, then take the masked mean — the large-norm-attack
+    defense; directional attacks at honest norms pass through."""
+    n = mask.shape[0]
+    leaves = jax.tree_util.tree_leaves(q_w)
+    sq = sum(jnp.square(q).reshape(n, -1).sum(axis=1) for q in leaves)
+    norms = jnp.sqrt(sq)                                        # (n,)
+    s = jnp.sort(jnp.where(mask > 0, norms, _BIG))
+    count, scale = _count_scale(mask)
+    cnt = count.astype(jnp.int32)
+    lo = jnp.clip((cnt - 1) // 2, 0, n - 1)
+    hi = jnp.clip(cnt // 2, 0, n - 1)
+    med = 0.5 * (s[lo] + s[hi])
+    clip = jnp.where(norms > med, med / jnp.maximum(norms, 1e-30), 1.0)
+    return jax.tree_util.tree_map(
+        lambda q: (q * _bcast(clip * mask, q)).sum(0) * scale, q_w)
+
+
+AGGREGATORS: dict[str, Callable] = {
+    "mean": mean,
+    "norm_clip": norm_clip,
+    "trimmed_mean": trimmed_mean,
+    "coordinate_median": coordinate_median,
+}
+
+
+def aggregator(name: str) -> Callable:
+    if name not in AGGREGATORS:
+        raise KeyError(f"unknown aggregator '{name}'; have "
+                       f"{sorted(AGGREGATORS)}")
+    return AGGREGATORS[name]

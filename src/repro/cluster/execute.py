@@ -249,11 +249,54 @@ def _get_row(params_w, w):
     return jax.tree_util.tree_map(lambda pw: pw[w], params_w)
 
 
+def _byzantine_transform(byz, bscale, n):
+    """Per-round gradient sabotage for the trace's Byzantine roster:
+    ``sign_flip`` rows send ``-g``, ``scale`` rows ``bscale * g``,
+    ``random`` rows ``bscale``-sized keyed noise. Returns None when the
+    roster is empty so the honest replay graph is untouched (bit-
+    identical to the pre-registry path)."""
+    if not byz:
+        return None
+    sign_m = _row_mask([w for w, m in byz if m == "sign_flip"], n)
+    scale_m = _row_mask([w for w, m in byz if m == "scale"], n)
+    rand_m = _row_mask([w for w, m in byz if m == "random"], n)
+    has_rand = bool(np.asarray(rand_m).sum() > 0)
+    fac = 1.0 - 2.0 * sign_m + (bscale - 1.0) * scale_m       # (n,)
+
+    def transform(q_w, keys):
+        leaves, treedef = jax.tree_util.tree_flatten(q_w)
+        out = []
+        for i, q in enumerate(leaves):
+            shaped = fac.reshape((n,) + (1,) * (q.ndim - 1))
+            v = q * shaped
+            if has_rand:
+                noise = jax.vmap(lambda k: bscale * jax.random.normal(
+                    jax.random.fold_in(k, 104729 + i),
+                    q.shape[1:]))(keys)
+                rm = rand_m.reshape((n,) + (1,) * (q.ndim - 1))
+                v = jnp.where(rm > 0, noise, v)
+            out.append(v)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return transform
+
+
 def _replay_sync(trace, workload, qgrad, *, lr, eval_every, n, wkey,
                  mixing_w, qmodel):
     del mixing_w, qmodel
+    from repro.cluster import aggregators as _aggs
+
     rounds = trace.extra("rounds")
     contributors = trace.extra_or("contributors")
+    agg_name = trace.extra_or("aggregator", "mean") or "mean"
+    byz = tuple(trace.extra_or("byzantine", ()) or ())
+    bscale = float(trace.extra_or("byzantine_scale", 1.0) or 1.0)
+    agg_fn = _aggs.aggregator(agg_name)
+    sabotage = _byzantine_transform(byz, bscale, n)
+    # the masked path also serves robust rules / Byzantine rosters on a
+    # full barrier (mask = everyone)
+    masked = (contributors is not None or agg_name != "mean"
+              or sabotage is not None)
 
     @jax.jit
     def round_step(params, r):
@@ -263,26 +306,26 @@ def _replay_sync(trace, workload, qgrad, *, lr, eval_every, n, wkey,
 
     @jax.jit
     def round_step_quorum(params, mask, r):
-        # graceful degradation: average the quorum's gradients only; an
-        # empty round leaves the model untouched (scale 0)
+        # graceful degradation: aggregate the quorum's gradients only;
+        # an empty round leaves the model untouched (zero update — the
+        # scheduler ledgered it as a QuorumShortfall)
         keys = jax.vmap(lambda w: wkey(w, r))(jnp.arange(n))
         q_w = jax.vmap(lambda k: qgrad(params, k))(keys)
-        count = mask.sum()
-        scale = jnp.where(count > 0, 1.0 / jnp.maximum(count, 1.0), 0.0)
-        avg = jax.tree_util.tree_map(
-            lambda q: (q * mask.reshape((n,) + (1,) * (q.ndim - 1))
-                       ).sum(0) * scale, q_w)
-        return _sub(params, avg, lr)
+        if sabotage is not None:
+            q_w = sabotage(q_w, keys)
+        return _sub(params, agg_fn(q_w, mask), lr)
 
     params = workload.params0
+    full = _row_mask(range(n), n)
     ts, losses = [], []
     t_sync = _sync_times(trace)
     for r in range(rounds):
-        if contributors is None:
+        if not masked:
             params = round_step(params, r)
         else:
-            params = round_step_quorum(params,
-                                       _row_mask(contributors[r], n), r)
+            mask = (_row_mask(contributors[r], n)
+                    if contributors is not None else full)
+            params = round_step_quorum(params, mask, r)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             ts.append(t_sync[r])
             losses.append(float(workload.eval_loss(params)))

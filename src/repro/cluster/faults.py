@@ -8,11 +8,15 @@ failure substrate every scale-out claim runs under:
 
   * ``FaultPlan`` — a declarative, seeded description of what goes wrong:
     crash/restart windows per worker (``t_up = inf`` is a permanent
-    departure), mid-run joins, and per-message drop / duplicate / extra-
-    delay distributions. Every decision is a pure function of
-    ``(seed, src, dst, tag, attempt)`` — the same plan yields the same
-    faults regardless of event-loop visit order, so traces stay
-    bit-reproducible (asserted in tests/test_faults.py).
+    departure), mid-run joins, per-message drop / duplicate / extra-
+    delay distributions, and the CORRUPT class: wire bit-flips caught by
+    the CRC32 frame, NaN/Inf-poisoned gradients caught by the post-
+    decode finite guard, bit-rotted checkpoint pulls, and persistent
+    Byzantine workers (sign-flip / scaled / random gradients). Every
+    decision is a pure function of ``(seed, stream, src, dst, tag,
+    attempt)`` — the same plan yields the same faults regardless of
+    event-loop visit order, so traces stay bit-reproducible (asserted in
+    tests/test_faults.py).
   * ``FaultLedger`` — the accounting the scheduler emits alongside the
     wire ledger: every dropped wire message, every retry, every
     duplicate, every straggler cut by a quorum/timeout, every membership
@@ -52,6 +56,9 @@ from repro.core import eventsim
 
 INF = float("inf")
 
+# persistent-adversary gradient transforms execute.py applies at replay
+BYZANTINE_MODES = frozenset({"sign_flip", "scale", "random"})
+
 
 # ---------------------------------------------------------------------------
 # The plan: what can go wrong, decided deterministically
@@ -72,6 +79,22 @@ class FaultPlan:
               the send: the bytes went on the wire and vanished).
     p_dup:    probability a delivered message is duplicated (the twin is
               delivered and ignored — at-least-once wires).
+    p_corrupt: probability a delivered payload arrives with flipped bits
+              — the CRC32 wire frame detects it on receive; reliable
+              channels retransmit, the unreliable uplink excludes the
+              contribution from the quorum.
+    p_poison: probability a payload decodes to NaN/Inf (corruption the
+              checksum happened to pass, or a worker emitting garbage) —
+              the post-decode finite guard skips-and-ledgers it.
+    p_ckpt_corrupt: probability a donor's stored checkpoint fails its
+              per-array CRC on arrival — the rejoiner re-fetches from
+              the next live donor.
+    byzantine: ``(worker, mode)`` pairs of persistently adversarial
+              workers, mode one of ``sign_flip`` (sends ``-g``),
+              ``scale`` (sends ``byzantine_scale * g``), ``random``
+              (sends ``byzantine_scale``-sized noise). Content faults,
+              not wire faults: the payload frames verify clean, so only
+              a robust aggregation rule defends.
     delay_scale / delay_sigma: extra in-network delay per message,
               ``delay_scale * lognormal(0, delay_sigma)`` seconds.
     max_retries / backoff: reliable-channel retransmit policy — retry
@@ -96,13 +119,20 @@ class FaultPlan:
     joins: tuple = ()
     max_retries: int = 3
     backoff: float = 0.05
+    p_corrupt: float = 0.0
+    p_poison: float = 0.0
+    p_ckpt_corrupt: float = 0.0
+    byzantine: tuple = ()
+    byzantine_scale: float = 8.0
 
     def __post_init__(self):
         crashes = tuple((int(w), float(a), float(b)) for w, a, b in
                         self.crashes)
         joins = tuple((int(w), float(t)) for w, t in self.joins)
+        byz = tuple((int(w), str(m)) for w, m in self.byzantine)
         object.__setattr__(self, "crashes", crashes)
         object.__setattr__(self, "joins", joins)
+        object.__setattr__(self, "byzantine", byz)
         for w, a, b in crashes:
             if not 0 <= w < self.n_workers:
                 raise ValueError(f"crash names worker {w} of "
@@ -113,6 +143,13 @@ class FaultPlan:
             if not 0 <= w < self.n_workers:
                 raise ValueError(f"join names worker {w} of "
                                  f"{self.n_workers}")
+        for w, mode in byz:
+            if not 0 <= w < self.n_workers:
+                raise ValueError(f"byzantine names worker {w} of "
+                                 f"{self.n_workers}")
+            if mode not in BYZANTINE_MODES:
+                raise ValueError(f"byzantine mode {mode!r} not in "
+                                 f"{sorted(BYZANTINE_MODES)}")
 
     # -- membership -------------------------------------------------------
 
@@ -154,7 +191,8 @@ class FaultPlan:
     @property
     def has_message_faults(self) -> bool:
         return (self.p_drop > 0.0 or self.p_dup > 0.0
-                or self.delay_scale > 0.0)
+                or self.delay_scale > 0.0 or self.p_corrupt > 0.0
+                or self.p_poison > 0.0)
 
     # -- per-message decisions -------------------------------------------
 
@@ -189,6 +227,50 @@ class FaultPlan:
         """Backoff before retry ``attempt`` (1-based)."""
         return self.backoff * (2.0 ** (attempt - 1))
 
+    # -- corruption class -------------------------------------------------
+
+    def corrupts_msg(self, src: int, dst: int, tag: str,
+                     attempt: int = 0) -> bool:
+        """Bit-flip corruption the receiver's CRC32 check detects."""
+        if self.p_corrupt <= 0.0:
+            return False
+        return bool(self._rng(5, src, dst, tag, attempt).random()
+                    < self.p_corrupt)
+
+    def poisons_msg(self, src: int, dst: int, tag: str,
+                    attempt: int = 0) -> bool:
+        """NaN/Inf poisoning the post-decode finite guard detects."""
+        if self.p_poison <= 0.0:
+            return False
+        return bool(self._rng(6, src, dst, tag, attempt).random()
+                    < self.p_poison)
+
+    def corrupt_bit(self, src: int, dst: int, tag: str, attempt: int,
+                    n_bits: int) -> int:
+        """WHICH bit flips in an ``n_bits``-long frame — pure function
+        of the message identity, so tests can materialize the exact
+        corruption the plan modelled."""
+        return int(self._rng(7, src, dst, tag, attempt).integers(
+            0, max(n_bits, 1)))
+
+    def bad_checkpoint(self, donor: int, worker: int,
+                       round_idx: int) -> bool:
+        """The donor's stored checkpoint fails its per-array CRC when it
+        lands at the rejoiner (stream 8; ``attempt`` slots the round)."""
+        if self.p_ckpt_corrupt <= 0.0:
+            return False
+        return bool(self._rng(8, donor, worker, "ckptsrc",
+                              round_idx).random() < self.p_ckpt_corrupt)
+
+    def byzantine_mode(self, worker: int) -> Optional[str]:
+        for w, mode in self.byzantine:
+            if w == worker:
+                return mode
+        return None
+
+    def is_byzantine(self, worker: int) -> bool:
+        return self.byzantine_mode(worker) is not None
+
 
 # ---------------------------------------------------------------------------
 # Scenario factories (the named failure benchmarks)
@@ -222,6 +304,30 @@ def churn(n: int, *, departures: Sequence = (), joins: Sequence = (),
     return FaultPlan(n, seed=seed, p_drop=p_drop,
                      crashes=tuple((w, t, INF) for w, t in departures),
                      joins=tuple(joins))
+
+
+def corrupt_wire(n: int, *, p_corrupt: float = 0.05,
+                 p_poison: float = 0.0, p_drop: float = 0.0,
+                 seed: int = 0) -> FaultPlan:
+    """Bits rot in flight: payloads arrive with flipped bits (CRC-
+    detected) and occasionally decode to NaN/Inf (guard-detected) —
+    membership is stable."""
+    return FaultPlan(n, seed=seed, p_drop=p_drop, p_corrupt=p_corrupt,
+                     p_poison=p_poison)
+
+
+def byzantine_workers(n: int, *, f: int = 2, mode: str = "sign_flip",
+                      scale: float = 8.0, p_corrupt: float = 0.0,
+                      seed: int = 0) -> FaultPlan:
+    """``f`` persistently adversarial workers (the lowest ids — which
+    ids is immaterial to the aggregators, and fixing them keeps every
+    trace and its replay bit-reproducible). Their wire frames verify
+    clean; only a robust aggregation rule defends."""
+    if not 0 <= f <= n:
+        raise ValueError(f"f={f} byzantine of n={n}")
+    return FaultPlan(n, seed=seed, p_corrupt=p_corrupt,
+                     byzantine=tuple((w, mode) for w in range(f)),
+                     byzantine_scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +366,24 @@ class DupRecord:
     src: int
     dst: int
     tag: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptRecord:
+    """One wire message that arrived bad and was detected on receive.
+
+    ``kind``: ``bitflip`` (CRC32 frame mismatch), ``nan`` (frame passed
+    but the decode produced non-finite values — the post-decode guard),
+    ``checksum`` (a checkpoint pull whose per-array CRC failed). The
+    bytes were paid for in full: detection happens after receipt."""
+
+    t: float
+    src: int
+    dst: int
+    size: float
+    tag: str
+    attempt: int = 0
+    kind: str = "bitflip"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,6 +441,7 @@ class FaultLedger:
     epochs: tuple = ()
     rejoins: tuple = ()
     lost_compute: tuple = ()    # (worker, t) — work killed by a crash
+    corrupt: tuple = ()         # CorruptRecord — detected-bad payloads
 
     @property
     def n_dropped(self) -> int:
@@ -334,6 +459,10 @@ class FaultLedger:
     def n_timed_out(self) -> int:
         return len(self.timeouts)
 
+    @property
+    def n_corrupted(self) -> int:
+        return len(self.corrupt)
+
     def summary(self) -> dict:
         return {"dropped": self.n_dropped, "retried": self.n_retried,
                 "duplicated": self.n_duplicated,
@@ -341,7 +470,8 @@ class FaultLedger:
                 "shortfalls": len(self.shortfalls),
                 "epochs": len(self.epochs),
                 "rejoins": len(self.rejoins),
-                "lost_compute": len(self.lost_compute)}
+                "lost_compute": len(self.lost_compute),
+                "corrupted": self.n_corrupted}
 
 
 class _LedgerBuilder:
@@ -356,12 +486,14 @@ class _LedgerBuilder:
         self.epochs: list = []
         self.rejoins: list = []
         self.lost_compute: list = []
+        self.corrupt: list = []
 
     def freeze(self) -> FaultLedger:
         return FaultLedger(tuple(self.drops), tuple(self.retries),
                            tuple(self.duplicates), tuple(self.timeouts),
                            tuple(self.shortfalls), tuple(self.epochs),
-                           tuple(self.rejoins), tuple(self.lost_compute))
+                           tuple(self.rejoins), tuple(self.lost_compute),
+                           tuple(self.corrupt))
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +512,8 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
       wire_msgs   every attempt that goes on the wire (originals, chained
                   retries tagged ``~a<k>``, duplicates tagged ``~dup``) —
                   all of them occupy ports in ``eventsim.simulate``;
-      statuses    ``(src, dst, tag) -> 'lost' | 'dup'`` for simulate();
+      statuses    ``(src, dst, tag) -> 'lost' | 'dup' | 'corrupted'``
+                  for simulate();
       delivered   ``(src, dst, base_tag) -> attempt_tag`` of the attempt
                   the receiver actually uses (absent: the message — and
                   on unreliable channels its payload — is gone).
@@ -388,7 +521,12 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
     Reliable channels chain deterministic retries: retry ``k`` is
     requested one estimated transfer (``est_cost``) plus
     ``plan.retry_wait(k)`` after the failed attempt; attempt
-    ``max_retries`` always succeeds so the round terminates.
+    ``max_retries`` always succeeds so the round terminates. Corrupted
+    arrivals (CRC mismatch, or NaN/Inf past the decode guard) ride the
+    same retry chain — the receiver got the bytes, checked them, and
+    asked again; on unreliable channels the contribution is simply
+    excluded (the quorum absorbs it, like a drop that cost full
+    transfer).
     """
     wire: list = []
     statuses: dict = {}
@@ -403,8 +541,15 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
         while True:
             tag = m.tag if attempt == 0 else f"{m.tag}~a{attempt}"
             lost = plan.drops_msg(m.src, m.dst, m.tag, attempt)
+            bad = None
+            if not lost:
+                if plan.corrupts_msg(m.src, m.dst, m.tag, attempt):
+                    bad = "bitflip"
+                elif plan.poisons_msg(m.src, m.dst, m.tag, attempt):
+                    bad = "nan"
             if reliable and attempt >= plan.max_retries:
                 lost = False        # transport escalation: must terminate
+                bad = None
             wire.append(eventsim.Msg(t_req, m.src, m.dst, m.size, tag,
                                      m.n_messages))
             if lost:
@@ -418,6 +563,26 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
                 obs_flight.record("faults.drop", t=t_req, src=m.src,
                                   dst=m.dst, tag=m.tag, attempt=attempt,
                                   reliable=reliable)
+                if not reliable:
+                    break
+                attempt += 1
+                ledger.retries.append(RetryRecord(t_req, m.src, m.dst,
+                                                  m.tag, attempt))
+                t_req = t_req + est_cost + plan.retry_wait(attempt)
+                continue
+            if bad is not None:
+                # the bytes landed in full, then failed the receiver's
+                # integrity check (CRC frame or finite guard)
+                statuses[(m.src, m.dst, tag)] = "corrupted"
+                ledger.corrupt.append(CorruptRecord(t_req, m.src, m.dst,
+                                                    m.size, m.tag,
+                                                    attempt, bad))
+                if obs.enabled("metrics"):
+                    obs.counter("faults.corrupted_msgs", kind=bad,
+                                reliable=reliable).inc()
+                obs_flight.record("faults.corrupt", t=t_req, src=m.src,
+                                  dst=m.dst, tag=m.tag, attempt=attempt,
+                                  corruption=bad, reliable=reliable)
                 if not reliable:
                     break
                 attempt += 1
@@ -441,7 +606,8 @@ def inject(msgs: Iterable[eventsim.Msg], plan: Optional[FaultPlan],
 
 def collect_quorum(arrivals: Sequence, *, t_start: float,
                    timeout: Optional[float], quorum: Optional[int],
-                   ledger: _LedgerBuilder, round_idx: int) -> tuple:
+                   ledger: _LedgerBuilder, round_idx: int,
+                   n_expected: int = 0) -> tuple:
     """Backup-worker aggregation: when does the server stop collecting?
 
     ``arrivals`` is ``[(t_end, worker), ...]`` of DELIVERED uplinks. The
@@ -452,6 +618,12 @@ def collect_quorum(arrivals: Sequence, *, t_start: float,
     dropped). Returns ``(t_agg, contributors)``; arrivals after the cut
     are recorded as ``TimeoutRecord``s, shortfalls as
     ``QuorumShortfall``.
+
+    ``n_expected`` is how many uplinks were sent this round: when EVERY
+    one was lost/corrupted/excluded the round must still close as a
+    recorded ``QuorumShortfall`` (the replay carries the previous
+    params), never as an aggregation over an empty contributor set —
+    even on a full-barrier schedule with no explicit quorum.
     """
     arr = sorted(arrivals)
     deadline = t_start + timeout if timeout is not None else INF
@@ -471,14 +643,16 @@ def collect_quorum(arrivals: Sequence, *, t_start: float,
                     t_end - t_agg)
             obs_flight.record("faults.quorum_cut", round=round_idx,
                               worker=w, t_cut=t_agg, t_arrival=t_end)
-    if quorum is not None and len(contributors) < quorum:
+    # an implicit quorum of 1 covers the all-excluded full-barrier edge
+    want = quorum if quorum is not None else (1 if n_expected > 0 else 0)
+    if len(contributors) < want:
         ledger.shortfalls.append(QuorumShortfall(round_idx,
                                                  len(contributors),
-                                                 quorum))
+                                                 want))
         if obs.enabled("metrics"):
             obs.counter("faults.quorum_shortfalls").inc()
         obs_flight.record("faults.quorum_shortfall", round=round_idx,
-                          got=len(contributors), wanted=quorum)
+                          got=len(contributors), wanted=want)
     return t_agg, contributors
 
 
@@ -533,8 +707,9 @@ def validate(trace) -> dict:
       * every ``lost`` delivery in ``trace.comm`` has exactly one
         ``DropRecord`` (same src/dst/base tag), and vice versa;
       * every ``dup`` delivery has exactly one ``DupRecord``;
+      * every ``corrupted`` delivery has exactly one ``CorruptRecord``;
       * every ``~a<k>`` retry attempt on the wire has a ``RetryRecord``;
-      * delivered = attempted - lost (nothing unaccounted);
+      * ok + lost + dup + corrupted == attempted (nothing unaccounted);
       * every update event lands at or before the makespan.
 
     Returns the tally so tests/benchmarks can publish it. When the
@@ -561,6 +736,8 @@ def _validate(trace) -> dict:
     lost = [d for d in trace.comm if getattr(d, "status", "ok") == "lost"]
     dups = [d for d in trace.comm if getattr(d, "status", "ok") == "dup"]
     ok = [d for d in trace.comm if getattr(d, "status", "ok") == "ok"]
+    corr = [d for d in trace.comm
+            if getattr(d, "status", "ok") == "corrupted"]
     retry_wires = [d for d in trace.comm
                    if "~a" in d.tag and getattr(d, "status", "ok") != "dup"]
 
@@ -575,13 +752,20 @@ def _validate(trace) -> dict:
     assert dup_keys == dup_led, (
         f"{len(dup_keys)} dup deliveries vs {len(dup_led)} ledger dups")
 
+    corr_keys = sorted((d.src, d.dst, base(d.tag)) for d in corr)
+    corr_led = sorted((r.src, r.dst, r.tag) for r in led.corrupt)
+    assert corr_keys == corr_led, (
+        f"{len(corr_keys)} corrupted deliveries vs {len(corr_led)} "
+        "ledger corruptions")
+
     retry_keys = sorted((d.src, d.dst, base(d.tag)) for d in retry_wires)
     retry_led = sorted((r.src, r.dst, r.tag) for r in led.retries)
     assert retry_keys == retry_led, (
         f"{len(retry_keys)} retry wires vs {len(retry_led)} ledger "
         "retries")
 
-    assert len(ok) + len(lost) + len(dups) == len(trace.comm)
+    assert (len(ok) + len(lost) + len(dups) + len(corr)
+            == len(trace.comm))
     for e in trace.events:
         assert e.t_wall <= trace.makespan + 1e-12
 

@@ -38,11 +38,17 @@ class SyncPS:
     the partitioned ring AllReduce (2(N-1) rounds of size/N partition
     messages — the same wire pattern and 2M(N-1)/N per-worker bytes as
     ``CSGDRingExchange``); the protocol semantics (barrier, staleness 0)
-    are unchanged, only the comm costing differs."""
+    are unchanged, only the comm costing differs.
+
+    ``aggregator`` names the PS aggregation rule from
+    ``cluster.aggregators`` (mean / norm_clip / trimmed_mean /
+    coordinate_median) — the robust-aggregation knob the Byzantine
+    scenarios turn; the replay trains under the named rule."""
 
     name: str = "sync_ps"
     timeout: Optional[float] = None     # graceful degradation: per-round
     quorum: Optional[int] = None        # deadline + backup-worker quorum
+    aggregator: str = "mean"            # robust aggregation rule
 
     def schedule(self, spec: ClusterSpec, *, rounds: int = 1,
                  horizon: Optional[float] = None,
@@ -50,7 +56,8 @@ class SyncPS:
         del horizon
         return scheduler.schedule_sync_ps(spec, rounds=rounds, plan=plan,
                                           timeout=self.timeout,
-                                          quorum=self.quorum)
+                                          quorum=self.quorum,
+                                          aggregator=self.aggregator)
 
 
 @dataclasses.dataclass(frozen=True)

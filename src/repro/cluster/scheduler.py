@@ -276,7 +276,8 @@ def _ring_allreduce_round(spec: ClusterSpec, t0: float,
 def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1,
                      plan: Optional[F.FaultPlan] = None,
                      timeout: Optional[float] = None,
-                     quorum: Optional[int] = None) -> Trace:
+                     quorum: Optional[int] = None,
+                     aggregator: str = "mean") -> Trace:
     """§1.3.2 synchronous PS: every round is compute -> uplink (serialized
     at the PS recv port) -> broadcast gated on full aggregation.
 
@@ -297,13 +298,20 @@ def schedule_sync_ps(spec: ClusterSpec, *, rounds: int = 1,
     ``quorum``/``timeout`` turn the barrier into backup-worker
     aggregation — the PS closes each round at the earlier of the
     ``quorum``-th arrival and ``t_round_start + timeout``, discarding
-    stragglers (ledgered as timeouts). Healthy full-barrier arithmetic
-    is bit-identical to before when all three are None.
+    stragglers (ledgered as timeouts). ``aggregator`` names the robust
+    aggregation rule (``cluster.aggregators``) the replay applies at the
+    PS — the schedule's timing is rule-independent (every rule reads the
+    same contributions), but the choice rides in the trace extras so
+    ``execute.replay`` trains under it. Healthy full-barrier arithmetic
+    is bit-identical to before when plan/timeout/quorum are None and the
+    aggregator is the default mean.
     """
-    if plan is not None or timeout is not None or quorum is not None:
+    if (plan is not None or timeout is not None or quorum is not None
+            or aggregator != "mean"):
         return _schedule_ps_rounds(spec, rounds=rounds, plan=plan,
                                    timeout=timeout, quorum=quorum,
-                                   protocol="sync_ps")
+                                   protocol="sync_ps",
+                                   aggregator=aggregator)
     n, ps, s = spec.n_workers, spec.n_workers, spec.msg_mb()
     t = 0.0
     version = 0
@@ -520,27 +528,60 @@ def _schedule_decentralized_faulty(spec: ClusterSpec, *, rounds: int,
         for w in range(n):
             if w not in up_now:
                 has_state.discard(w)
-        # -- rejoiners pull a compressed checkpoint from a live peer
+        # -- rejoiners pull a compressed checkpoint from a live peer;
+        # a pull whose per-array CRC fails on arrival (plan.
+        # bad_checkpoint) is ledgered as a checksum CorruptRecord and
+        # re-fetched from the NEXT donor (tag suffix ``.d<i>``) — the
+        # last live donor's copy is taken as-is (no one else to ask)
         rejoiners = sorted(w for w in up_now if w not in has_state)
         t_ready = {w: t_start for w in up_now}
         rejoin_pairs = []
         ck_msgs = []
+        bad_msgs = []
+        bad_status: dict = {}
+        ck_tag: dict = {}
         for w in rejoiners:
-            donors = [x for x in up_now if x != w and x in has_state]
-            donor = min(donors) if donors else PS
-            rejoin_pairs.append((w, donor))
-            if donor != PS:
-                ck_msgs.append(eventsim.Msg(t_start, donor, w,
-                                            spec.msg_mb(),
-                                            f"ckpt{r}.{w}",
+            donors = sorted(x for x in up_now
+                            if x != w and x in has_state)
+            if not donors:
+                rejoin_pairs.append((w, PS))
+                continue
+            t_req = t_start
+            for di, donor in enumerate(donors):
+                tag = (f"ckpt{r}.{w}" if di == 0
+                       else f"ckpt{r}.{w}.d{di}")
+                if (di < len(donors) - 1
+                        and plan.bad_checkpoint(donor, w, r)):
+                    bad_msgs.append(eventsim.Msg(
+                        t_req, donor, w, spec.msg_mb(), tag,
+                        spec.n_messages))
+                    bad_status[(donor, w, tag)] = "corrupted"
+                    led.corrupt.append(F.CorruptRecord(
+                        t_req, donor, w, spec.msg_mb(), tag, di,
+                        "checksum"))
+                    t_req += spec.msg_cost() + plan.retry_wait(di + 1)
+                    continue
+                rejoin_pairs.append((w, donor))
+                ck_msgs.append(eventsim.Msg(t_req, donor, w,
+                                            spec.msg_mb(), tag,
                                             spec.n_messages))
-        if ck_msgs:
-            _, arrival = _simulate_injected(spec, ck_msgs, plan, led,
-                                            reliable=True, comm=comm,
-                                            recs=recs)
-            for (w, donor) in rejoin_pairs:
-                if donor != PS:
-                    t_ready[w] = arrival[(donor, w, f"ckpt{r}.{w}")]
+                ck_tag[w] = (donor, tag)
+                break
+        if ck_msgs or bad_msgs:
+            wire, statuses, delivered = F.inject(
+                ck_msgs, plan, led, reliable=True,
+                est_cost=spec.msg_cost())
+            wire += bad_msgs
+            statuses.update(bad_status)
+            res = eventsim.simulate(wire, t_lat=spec.t_lat,
+                                    t_tr=spec.t_tr, statuses=statuses)
+            comm += list(res.deliveries)
+            recs += list(res.messages)
+            ends = {(d.src, d.dst, d.tag): d.t_end
+                    for d in res.deliveries}
+            for w, (donor, tag) in ck_tag.items():
+                t_ready[w] = ends[(donor, w,
+                                   delivered[(donor, w, tag)])]
         for (w, donor) in rejoin_pairs:
             led.rejoins.append(F.RejoinRecord(t_ready[w], w, r, donor))
             events.append(TraceEvent("rejoin", w, r, r, r, 0,
@@ -684,20 +725,28 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
                         timeout: Optional[float],
                         quorum: Optional[int], protocol: str,
                         period_h: int = 1,
-                        laq_skip: Optional[int] = None) -> Trace:
+                        laq_skip: Optional[int] = None,
+                        aggregator: str = "mean") -> Trace:
     """PS-pattern rounds (sync_ps / local_sgd / laq) under fault
     injection and/or backup-worker aggregation.
 
     Per round: rejoiners pull the model through the checkpoint wire
     (reliable), live workers compute (``period_h`` steps; a crash window
     inside the compute span kills the round's work), uploads go over the
-    UNRELIABLE uplink (drops are lost — the quorum absorbs them), the
-    PS closes the round per ``faults.collect_quorum``, and the broadcast
-    goes over the RELIABLE downlink (drops retry with backoff — every
-    surviving member must hold the new model). Extras carry the
-    per-round ``present`` / ``contributors`` / ``receivers`` /
-    ``rejoiners`` lists the replay masks on.
+    UNRELIABLE uplink (drops are lost and corrupted frames are excluded
+    — the quorum absorbs both), the PS closes the round per
+    ``faults.collect_quorum`` (a round whose every uplink was excluded
+    terminates as a ``QuorumShortfall``, never an empty aggregation),
+    and the broadcast goes over the RELIABLE downlink (drops AND
+    CRC-failed frames retry with backoff — every surviving member must
+    hold the new model). Extras carry the per-round ``present`` /
+    ``contributors`` / ``receivers`` / ``rejoiners`` lists the replay
+    masks on, plus the ``aggregator`` rule and the plan's ``byzantine``
+    roster so ``execute.replay`` trains under the same adversary.
     """
+    from repro.cluster import aggregators as _agg
+
+    _agg.aggregator(aggregator)     # fail fast on unknown rules
     if spec.allreduce == "ring":
         raise ValueError(
             "fault injection / quorum rounds use PS costing; the bulk-"
@@ -782,7 +831,7 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
                     if (w, ps, f"agg{r}") in arrival]
         t_agg, contribs = F.collect_quorum(
             arrivals, t_start=t_start, timeout=timeout, quorum=quorum,
-            ledger=led, round_idx=r)
+            ledger=led, round_idx=r, n_expected=len(senders))
         t_agg = max(t_agg, t_start)
         if obs.enabled("metrics") and arrivals:
             # how long the round would have waited past the quorum cut
@@ -821,6 +870,10 @@ def _schedule_ps_rounds(spec: ClusterSpec, *, rounds: int,
         rejoin_rounds.append(tuple((w, PS) for w in rejoiners))
     extras = [("rounds", rounds), ("allreduce", spec.allreduce),
               ("timeout", timeout), ("quorum", quorum),
+              ("aggregator", aggregator),
+              ("byzantine", plan.byzantine if plan is not None else ()),
+              ("byzantine_scale",
+               plan.byzantine_scale if plan is not None else 1.0),
               ("present", tuple(present_rounds)),
               ("contributors", tuple(contrib_rounds)),
               ("receivers", tuple(receiver_rounds)),
@@ -945,10 +998,29 @@ def schedule_async_ps(spec: ClusterSpec, *, horizon: float,
             ps_send_free = t0 + msg
             lost = (plan is not None and attempt < plan.max_retries
                     and plan.drops_msg(ps, w, base, attempt))
-            record(t0, ps, w, tag, "lost" if lost else "ok")
+            bad = None
+            if plan is not None and not lost and attempt < plan.max_retries:
+                if plan.corrupts_msg(ps, w, base, attempt):
+                    bad = "bitflip"
+                elif plan.poisons_msg(ps, w, base, attempt):
+                    bad = "nan"
+            record(t0, ps, w, tag,
+                   "lost" if lost else ("corrupted" if bad else "ok"))
             if lost:
                 led.drops.append(F.DropRecord(t0, ps, w, s, base,
                                               attempt))
+                led.retries.append(F.RetryRecord(t0, ps, w, base,
+                                                 attempt + 1))
+                t_retry = t0 + msg + plan.retry_wait(attempt + 1)
+                heapq.heappush(q, (t_retry, seq, "pull", w, t,
+                                   attempt + 1))
+                seq += 1
+                continue
+            if bad is not None:
+                # arrived in full, failed the worker's integrity check:
+                # the reliable pull channel re-requests it
+                led.corrupt.append(F.CorruptRecord(t0, ps, w, s, base,
+                                                   attempt, bad))
                 led.retries.append(F.RetryRecord(t0, ps, w, base,
                                                  attempt + 1))
                 t_retry = t0 + msg + plan.retry_wait(attempt + 1)
@@ -976,7 +1048,14 @@ def schedule_async_ps(spec: ClusterSpec, *, horizon: float,
             ps_recv_free = t_applied
             lost = (plan is not None and attempt < plan.max_retries
                     and plan.drops_msg(w, ps, base, attempt))
-            record(t0, w, ps, tag, "lost" if lost else "ok")
+            bad = None
+            if plan is not None and not lost and attempt < plan.max_retries:
+                if plan.corrupts_msg(w, ps, base, attempt):
+                    bad = "bitflip"
+                elif plan.poisons_msg(w, ps, base, attempt):
+                    bad = "nan"
+            record(t0, w, ps, tag,
+                   "lost" if lost else ("corrupted" if bad else "ok"))
             if lost:
                 led.drops.append(F.DropRecord(t0, w, ps, s, base,
                                               attempt))
@@ -985,6 +1064,18 @@ def schedule_async_ps(spec: ClusterSpec, *, horizon: float,
                 t_retry = t_applied + plan.retry_wait(attempt + 1)
                 # t_begin survives: a crash while the gradient waits to
                 # be retransmitted still loses it
+                heapq.heappush(q, (t_retry, seq, "push", w, t_begin,
+                                   attempt + 1))
+                seq += 1
+                continue
+            if bad is not None:
+                # the PS read the bytes, failed the CRC/finite check,
+                # and NACKed: the worker retransmits the same gradient
+                led.corrupt.append(F.CorruptRecord(t0, w, ps, s, base,
+                                                   attempt, bad))
+                led.retries.append(F.RetryRecord(t0, w, ps, base,
+                                                 attempt + 1))
+                t_retry = t_applied + plan.retry_wait(attempt + 1)
                 heapq.heappush(q, (t_retry, seq, "push", w, t_begin,
                                    attempt + 1))
                 seq += 1

@@ -35,6 +35,18 @@ Every exchange reports its measured per-iteration wire bytes via
 The production (pjit) tier reuses the same codec registry on the
 device-owned gradient shard (multi-server-PS view: devices ARE the
 servers of their FSDP partition); see train/steps.py.
+
+Wire integrity: every decode site here runs INSIDE the mapped graph
+(shard_map/ppermute), where a checksum branch would perturb the
+bit-identity contracts above — so integrity framing lives one layer
+down, host-side, in ``repro.core.compression`` (``frame`` /
+``verify_wire`` / ``checked_decode`` compute a CRC32 over a FlatPacked's
+payload + params bytes, and ``guard_finite`` catches NaN/Inf that a CRC
+cannot, since a poisoned-but-consistent payload frames correctly). The
+cluster tier models detection outcomes on the simulated wire
+(``faults.FaultPlan.corrupts_msg``); the 4-byte CRC sidecar is
+deliberately NOT charged to ``message_bytes`` so measured wire bytes —
+and every eventsim makespan derived from them — are unchanged.
 """
 from __future__ import annotations
 

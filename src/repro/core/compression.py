@@ -63,11 +63,13 @@ the operators are usable inside jit/shard_map.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from functools import lru_cache, partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro import obs
@@ -941,3 +943,108 @@ def tree_bytes(tree, spec: CompressionSpec) -> float:
     Prefer Codec.tree_wire_bytes (measured) — this remains for spec-only
     arithmetic."""
     return sum(spec.compressed_bytes(leaf.size) for leaf in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Wire integrity: CRC32 framing over packed codes + params
+# ---------------------------------------------------------------------------
+#
+# A flipped bit in a packed payload silently corrupts an entire bucket of
+# quantization codes (and a flipped bit in a params row rescales one), so
+# every Packed / FlatPacked / PartitionedFlatPacked message can be framed
+# with a CRC32 over its payload bytes followed by its params bytes. The
+# checksum is a HOST-SIDE sidecar, not a pytree child: the wire classes'
+# children stay exactly (payload, params), so collective lowerings,
+# measured `wire_bytes`, and the event-simulator byte accounting are all
+# unchanged — framing rides next to the message (a 4-byte header the size
+# model treats as noise), it never perturbs it. Verification is therefore
+# a host-boundary operation (send/receive edges); the in-graph exchange
+# paths (jit/shard_map ppermutes) instead rely on the post-decode finite
+# guard plus the scheduler's modelled CRC detection.
+
+
+class WireCorruptionError(ValueError):
+    """A packed wire message failed its integrity check on receive."""
+
+
+def _wire_children(packed) -> tuple:
+    """(payload, params) as host numpy arrays, any wire class."""
+    return (np.asarray(jax.device_get(packed.payload)),
+            np.asarray(jax.device_get(packed.params)))
+
+
+def wire_crc32(packed) -> int:
+    """CRC32 over the packed codes then the dequantization params."""
+    pay, par = _wire_children(packed)
+    return zlib.crc32(par.tobytes(), zlib.crc32(pay.tobytes())) & 0xFFFFFFFF
+
+
+def wire_bits(packed) -> int:
+    """Total framed bits (payload + params) — the bit-flip domain."""
+    pay, par = _wire_children(packed)
+    return (pay.nbytes + par.nbytes) * 8
+
+
+def frame(packed) -> tuple:
+    """``(packed, crc)`` — what a framed send puts on the wire."""
+    return packed, wire_crc32(packed)
+
+
+def verify_wire(packed, crc: int, *, where: str = "wire") -> None:
+    """Raise ``WireCorruptionError`` unless the frame checks out."""
+    got = wire_crc32(packed)
+    want = int(crc) & 0xFFFFFFFF
+    if got != want:
+        raise WireCorruptionError(
+            f"{where}: CRC32 mismatch on packed message "
+            f"(got 0x{got:08x}, frame says 0x{want:08x}) — payload or "
+            "params corrupted in flight")
+
+
+def checked_decode(cdc: Codec, packed, crc: int, *, where: str = "wire"):
+    """Verify the frame, then decode; the receive edge in one call."""
+    verify_wire(packed, crc, where=where)
+    out = (cdc.flat_decode(packed) if isinstance(packed, FlatPacked)
+           else cdc.decode(packed))
+    guard_finite(out, where=where)
+    return out
+
+
+def flip_bit(packed, bit: int):
+    """A copy of the wire message with exactly one bit flipped —
+    payload bits first, then params bits (the ``wire_bits`` order the
+    fault plan's ``corrupt_bit`` indexes into)."""
+    children, treedef = jax.tree_util.tree_flatten(packed)
+    pay, par = (np.asarray(jax.device_get(c)) for c in children)
+    if not 0 <= bit < (pay.nbytes + par.nbytes) * 8:
+        raise ValueError(f"bit {bit} outside the "
+                         f"{(pay.nbytes + par.nbytes) * 8}-bit frame")
+
+    def _flipped(arr, b):
+        buf = bytearray(arr.tobytes())
+        buf[b // 8] ^= 1 << (b % 8)
+        return np.frombuffer(bytes(buf),
+                             dtype=arr.dtype).reshape(arr.shape)
+
+    if bit < pay.nbytes * 8:
+        pay = _flipped(pay, bit)
+    else:
+        par = _flipped(par, bit - pay.nbytes * 8)
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(pay), jnp.asarray(par)])
+
+
+def tree_finite(tree) -> bool:
+    """Host-side all-finite check over a decoded pytree."""
+    return all(bool(jnp.isfinite(leaf).all())
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def guard_finite(tree, *, where: str = "decode") -> None:
+    """The post-decode guard: NaN/Inf that slipped past the checksum
+    (or a worker emitting garbage) raises instead of poisoning the
+    aggregate — the scheduler ledgers the skip as a ``CorruptRecord``."""
+    if not tree_finite(tree):
+        raise WireCorruptionError(
+            f"{where}: decoded payload contains NaN/Inf — contribution "
+            "skipped (post-decode finite guard)")

@@ -67,11 +67,11 @@ def expected_counts(cluster_trace) -> dict:
     n_quorum_spans = 0
     if led is not None:
         n_fault_instants = (len(led.drops) + len(led.retries)
-                            + len(led.duplicates) + len(led.shortfalls)
-                            + len(led.epochs) + len(led.rejoins)
-                            + len(led.lost_compute))
+                            + len(led.duplicates) + len(led.corrupt)
+                            + len(led.shortfalls) + len(led.epochs)
+                            + len(led.rejoins) + len(led.lost_compute))
         n_quorum_spans = len(led.timeouts)
-    by_status = {"ok": 0, "lost": 0, "dup": 0}
+    by_status = {"ok": 0, "lost": 0, "dup": 0, "corrupted": 0}
     for d in cluster_trace.comm:
         by_status[getattr(d, "status", "ok")] += 1
     return {"wire_spans": len(cluster_trace.comm),
@@ -84,7 +84,7 @@ def expected_counts(cluster_trace) -> dict:
 def timeline_counts(events: list) -> dict:
     """The same tally, read back from exported traceEvents."""
     cats = [(e.get("cat", ""), e.get("ph")) for e in events]
-    by_status = {"ok": 0, "lost": 0, "dup": 0}
+    by_status = {"ok": 0, "lost": 0, "dup": 0, "corrupted": 0}
     for e in events:
         cat = e.get("cat", "")
         if e.get("ph") == "X" and cat.startswith("wire,"):
@@ -108,7 +108,7 @@ def verify_timeline(cluster_trace, tracer: obs_trace.Tracer) -> dict:
     want = expected_counts(cluster_trace)
     got = timeline_counts(tracer.events())
     assert got == want, f"timeline/ledger mismatch: {got} != {want}"
-    # the ok+lost+dup == comm partition, mirrored from faults.validate
+    # the ok+lost+dup+corrupted == comm partition, per faults.validate
     assert sum(want["wire_by_status"].values()) == len(cluster_trace.comm)
     return want
 

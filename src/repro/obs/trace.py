@@ -17,11 +17,11 @@ ledgers alone — deterministically, with an exact accounting contract:
   * ONE complete ('X') span per ``Delivery`` in ``trace.comm``, on the
     worker-side endpoint's track (uplink: sender; downlink: receiver;
     gossip: sender), ``cat = "wire,<direction>,<status>"`` — so
-    ok+lost+dup wire spans == the wire ledger, mirroring
+    ok+lost+dup+corrupted wire spans == the wire ledger, mirroring
     ``faults.validate``;
   * ONE instant per ``TraceEvent`` (updates/barriers/rejoins) and per
-    fault-ledger record (drops, retries, dups, shortfalls, epochs,
-    lost compute), plus one 'X' quorum-wait span per ``TimeoutRecord``
+    fault-ledger record (drops, retries, dups, corruptions, shortfalls,
+    epochs, lost compute), plus one 'X' quorum-wait span per ``TimeoutRecord``
     (the late arrival's [cut, arrival] window).
 
 Those counts are asserted by ``repro.obs.export`` at export time and by
@@ -273,6 +273,11 @@ def timeline_from_trace(cluster_trace, *, into: Optional[Tracer] = None
             tr.instant("dup", worker=wtrack(r.src), lane="faults",
                        t=r.t, cat="fault,dup",
                        args={"dst": r.dst, "tag": r.tag})
+        for r in led.corrupt:
+            tr.instant("corrupt", worker=wtrack(r.src), lane="faults",
+                       t=r.t, cat="fault,corrupt",
+                       args={"dst": r.dst, "tag": r.tag,
+                             "attempt": r.attempt, "kind": r.kind})
         for r in led.timeouts:
             # the quorum wait the straggler lost: [cut, late arrival]
             tr.sim_span("quorum-late", worker=r.worker, lane="faults",

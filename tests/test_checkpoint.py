@@ -71,3 +71,57 @@ def test_failed_write_leaves_previous_checkpoint_intact(tmp_path):
     # the failed write neither clobbered step-7 nor left temp files
     assert sorted(os.listdir(tmp_path)) == ["step-00000007.npz"]
     assert open(f, "rb").read() == before
+
+
+# ---------------------------------------------------------------------------
+# Per-array CRC32 integrity (PR-9)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_carries_per_array_checksums(tmp_path):
+    f = save_state(_state(), str(tmp_path), step=1)
+    keys = set(np.load(f).files)
+    arrays = {k for k in keys if not k.startswith("__crc__")}
+    assert {"__crc__" + k for k in arrays} <= keys
+    back = load_state(_state(), f)          # clean verify on load
+    assert np.array_equal(np.asarray(back["w"]),
+                          np.asarray(_state()["w"]))
+    assert back["b"].dtype == jnp.bfloat16
+
+
+def test_bitflipped_array_fails_checksum_naming_the_leaf(tmp_path):
+    from repro.checkpoint import CheckpointCorruptionError
+
+    f = save_state(_state(), str(tmp_path), step=2)
+    data = dict(np.load(f))
+    arr = data["w"].copy()
+    raw = bytearray(arr.tobytes())
+    raw[3] ^= 0x40                           # one silent bit-flip
+    data["w"] = np.frombuffer(bytes(raw),
+                              dtype=arr.dtype).reshape(arr.shape)
+    np.savez(f, **data)                      # valid zip, bad bytes
+    with pytest.raises(CheckpointCorruptionError, match="'w'"):
+        load_state(_state(), f)
+    assert issubclass(CheckpointCorruptionError, ValueError)
+
+
+def test_bf16_checksum_covers_raw_stored_bytes(tmp_path):
+    f = save_state(_state(), str(tmp_path), step=3)
+    data = dict(np.load(f))
+    arr = data["__bf16__b"].copy()           # stored as a uint16 view
+    arr[0] ^= 1
+    data["__bf16__b"] = arr
+    np.savez(f, **data)
+    with pytest.raises(ValueError, match="__bf16__b"):
+        load_state(_state(), f)
+
+
+def test_checksumless_archive_still_loads(tmp_path):
+    # pre-integrity checkpoints (no __crc__ entries) stay restorable
+    f = save_state(_state(), str(tmp_path), step=4)
+    data = {k: v for k, v in dict(np.load(f)).items()
+            if not k.startswith("__crc__")}
+    np.savez(f, **data)
+    back = load_state(_state(), f)
+    assert np.array_equal(np.asarray(back["w"]),
+                          np.asarray(_state()["w"]))
