@@ -1,0 +1,166 @@
+"""Serving benchmark: continuous batching vs the gang-scheduled
+baseline, plus a live checkpoint hot-swap row.
+
+Three scenarios over the same synthetic mixed-length heavy-traffic
+workload (fixed prompt length, per-request generation lengths cycling
+``mixed_gen`` — the spread that makes a static batch hold finished
+slots hostage until the longest member drains):
+
+  static      the old gang-scheduled loop: admit ``slots`` requests,
+              decode until ALL finish, repeat
+  continuous  in-flight batching: a finished sequence frees its slot
+              mid-decode and the next queued request is spliced in
+  hotswap     continuous serving while a compressed (rq8, CRC-framed)
+              checkpoint is published mid-decode; the row records zero
+              dropped requests and whether post-swap decode is
+              BIT-identical to a cold start from the same published
+              checkpoint (the bench exits 1 if either fails — the
+              correctness half is not left to the warn-only delta gate)
+
+Rows share the BENCH_*.json conventions (identity = ``op``/``scenario``;
+``tokens_per_s`` is gated as bigger-is-better by its ``_per_s`` suffix;
+``vs_static_speedup`` likewise). Emits ``BENCH_serve.json`` at the repo
+root; ``--smoke`` shrinks the workload to CI scale and CI diffs the
+result against the committed ``BENCH_serve_smoke.json`` with
+``bench_delta.py`` (warn-only: serving throughput is wall-clock, not a
+closed form, so drift warns instead of blocking).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+from repro import obs, serve
+from repro.models import transformer_scan
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_serve.json")
+
+
+def workload_config(*, smoke: bool) -> serve.ServeConfig:
+    """The mixed-length workload both throughput scenarios share."""
+    if smoke:
+        return serve.ServeConfig(slots=4, max_len=24, n_requests=12,
+                                 prompt_len=4, mixed_gen=(2, 4, 12))
+    return serve.ServeConfig(slots=4, max_len=64, n_requests=24,
+                             prompt_len=4, mixed_gen=(4, 8, 48))
+
+
+def run_throughput(cfg: serve.ServeConfig) -> dict:
+    rows = {}
+    params = None
+    for mode in ("static", "continuous"):
+        mcfg = dataclasses.replace(cfg, mode=mode)
+        eng = serve.Engine(mcfg, params=params)
+        params = eng.params          # identical params across modes
+        rows[mode] = serve.run(mcfg, engine=eng).row(op="serve",
+                                                     scenario=mode)
+    rows["continuous"]["vs_static_speedup"] = round(
+        rows["continuous"]["tokens_per_s"] / rows["static"]["tokens_per_s"],
+        3)
+    return rows
+
+
+def run_hotswap(cfg: serve.ServeConfig) -> dict:
+    """Continuous serving across a mid-decode compressed-checkpoint
+    swap; verifies the two acceptance properties inline."""
+    cfg = dataclasses.replace(cfg, mode="continuous")
+    eng = serve.Engine(cfg)
+    channel = serve.CheckpointChannel()
+    eng.subscribe(channel)
+    reqs = serve.synthetic_requests(cfg)
+    eng.warmup(sorted({len(r.tokens) for r in reqs}))
+
+    import time
+    eng._t0 = time.monotonic()
+    for r in reqs:
+        eng.submit(r.tokens, r.max_new_tokens, rid=r.rid)
+    for _ in range(3):               # decode a while on the boot params
+        eng.step()
+    trained = transformer_scan.init(eng.model_cfg,
+                                    jax.random.PRNGKey(2024))
+    pub = channel.publish(trained, step=1,
+                          codec=cfg.checkpoint_codec)
+    eng.run()
+    jax.block_until_ready(eng._tokens)
+    stats = eng.stats()
+
+    # post-swap decode must be bit-identical to a cold start from the
+    # SAME published wire message
+    probe = np.arange(cfg.prompt_len, dtype=np.int32) % eng.model_cfg.vocab
+    rid_hot = eng.submit(probe, 8)
+    eng.run()
+    cold = serve.Engine(cfg, params=serve.CheckpointChannel.decode(pub))
+    cold.warmup([cfg.prompt_len])
+    rid_cold = cold.submit(probe, 8)
+    cold.run()
+    bit_identical = (eng.result(rid_hot).tokens
+                     == cold.result(rid_cold).tokens)
+
+    row = {
+        "op": "serve", "scenario": "hotswap",
+        "requests": stats["completed"],
+        "decode_steps": stats["decode_steps"],
+        "total_tokens": stats["generated_tokens"],
+        "tokens_per_s": round(stats["tokens_per_s"], 2),
+        "p50_ms": round(stats["p50_ms"], 2),
+        "p99_ms": round(stats["p99_ms"], 2),
+        "swaps": stats["swaps"],
+        "dropped": stats["dropped"],
+        "rejected": stats["rejected"],
+        "ckpt_wire_kb": round(pub.wire_bytes / 1e3, 1),
+        "bit_identical_post_swap": bool(bit_identical),
+    }
+    ok = (stats["swaps"] == 1 and stats["dropped"] == 0
+          and stats["completed"] == cfg.n_requests and bit_identical)
+    return row, ok
+
+
+def main(*, smoke: bool, out_path: str) -> int:
+    cfg = workload_config(smoke=smoke)
+    through = run_throughput(cfg)
+    hot_row, hot_ok = run_hotswap(cfg)
+    rows = [through["static"], through["continuous"], hot_row]
+    obs.stamp_rows(rows)
+
+    speedup = through["continuous"]["vs_static_speedup"]
+    print(f"# serve: {cfg.arch} (reduced), slots={cfg.slots}, "
+          f"{cfg.n_requests} requests, prompt={cfg.prompt_len}, "
+          f"gen={cfg.mixed_gen}")
+    print(f"{'scenario':12s} {'tok/s':>8s} {'steps':>6s} {'p50ms':>8s} "
+          f"{'p99ms':>8s} {'drop':>5s}")
+    for r in rows:
+        print(f"{r['scenario']:12s} {r['tokens_per_s']:8.1f} "
+              f"{r['decode_steps']:6d} {r['p50_ms']:8.1f} "
+              f"{r['p99_ms']:8.1f} {r['dropped']:5d}")
+    print(f"# continuous vs static: {speedup:.2f}x | hot-swap "
+          f"bit-identical={hot_row['bit_identical_post_swap']} "
+          f"dropped={hot_row['dropped']} "
+          f"wire={hot_row['ckpt_wire_kb']}kB")
+
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(out_path)}")
+
+    if not hot_ok:
+        print("::error::serve_bench: hot-swap scenario failed "
+              "(drop/swap/bit-identity)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI-scale)")
+    ap.add_argument("--out", default=OUT_PATH,
+                    help="where to write BENCH_serve.json")
+    args = ap.parse_args()
+    sys.exit(main(smoke=args.smoke, out_path=args.out))

@@ -1,24 +1,71 @@
-"""Batched serving example: prefill + autoregressive decode with KV /
-recurrent caches across three architecture families.
+"""Batched serving example: the engine API across three architecture
+families, plus a live train->serve checkpoint hot-swap.
 
-Runs the reduced configs of a dense (GQA), an SSM (RWKV6) and a hybrid
-(RecurrentGemma) model through the same serve_step API — the point being
-that the decode state abstraction (ring-buffer KV cache, O(1) recurrent
-state) is uniform, which is what lets `long_500k` lower for every family
-in the dry-run.
+Part 1 runs the reduced configs of a dense (GQA), an SSM (RWKV6) and a
+hybrid (RecurrentGemma) model through the SAME ``serve.run`` call — the
+point being that the slot-paged decode-state abstraction (ring-buffer
+KV cache, O(1) recurrent state) is uniform, so continuous batching and
+admission control come for free for every family.
+
+Part 2 closes the train->serve loop: a trainer publishes rq8-compressed
+CRC-framed checkpoints into a ``CheckpointChannel`` while the engine is
+mid-decode; the engine swaps params between decode steps with zero
+dropped requests.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
+
+Note it calls ``serve.run(ServeConfig(...))`` directly — no argv lists;
+the CLI in ``repro.launch.serve`` is just another client of the same
+function.
 """
-from repro.launch import serve as serve_cli
+import jax
+import numpy as np
+
+from repro import serve
+from repro.models import transformer_scan
+
+
+def serve_three_families():
+    for arch, window in [("qwen1.5-0.5b", 16),
+                         ("rwkv6-3b", 0),
+                         ("recurrentgemma-9b", 0)]:
+        print(f"\n==== {arch} (reduced) ====")
+        cfg = serve.ServeConfig(
+            arch=arch, reduced=True, slots=2, window=window, max_len=32,
+            n_requests=4, prompt_len=12, mixed_gen=(6, 12),
+            temperature=1.0)
+        print(serve.format_result(serve.run(cfg)))
+
+
+def hot_swap_mid_decode():
+    print("\n==== live checkpoint hot-swap (qwen1.5-0.5b reduced) ====")
+    cfg = serve.ServeConfig(slots=2, max_len=64, prompt_len=8)
+    engine = serve.Engine(cfg)
+    channel = serve.CheckpointChannel()
+    engine.subscribe(channel)
+    engine.warmup([8])
+
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        engine.submit(rng.integers(0, engine.model_cfg.vocab, 8), 24)
+    for _ in range(6):            # decode a while on the initial params
+        engine.step()
+
+    # "training" publishes a compressed checkpoint; here: fresh params
+    trained = transformer_scan.init(engine.model_cfg, jax.random.PRNGKey(7))
+    pub = channel.publish(trained, step=100, codec="rq8")
+    print(f"published seq={pub.seq} ({pub.wire_bytes/1e3:.1f} kB on the "
+          f"wire vs {sum(l.size * 4 for l in jax.tree_util.tree_leaves(trained))/1e3:.1f} kB fp32)")
+
+    engine.run()                  # swap applies between decode steps
+    s = engine.stats()
+    print(f"swaps={s['swaps']} dropped={s['dropped']} "
+          f"completed={s['completed']} tokens={s['generated_tokens']}")
 
 
 def main():
-    for arch, extra in [("qwen1.5-0.5b", ["--window", "16"]),
-                        ("rwkv6-3b", []),
-                        ("recurrentgemma-9b", [])]:
-        print(f"\n==== {arch} (reduced) ====")
-        serve_cli.main(["--arch", arch, "--reduced", "--batch", "2",
-                        "--prompt-len", "12", "--gen", "12"] + extra)
+    serve_three_families()
+    hot_swap_mid_decode()
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Registry
+
 # sorts masked-out rows past every real fp32 gradient without the NaN
 # semantics of +inf arithmetic
 _BIG = 3.0e38
@@ -126,16 +128,13 @@ def norm_clip(q_w, mask: jnp.ndarray):
         lambda q: (q * _bcast(clip * mask, q)).sum(0) * scale, q_w)
 
 
-AGGREGATORS: dict[str, Callable] = {
+AGGREGATORS: Registry = Registry("aggregator", {
     "mean": mean,
     "norm_clip": norm_clip,
     "trimmed_mean": trimmed_mean,
     "coordinate_median": coordinate_median,
-}
+})
 
 
 def aggregator(name: str) -> Callable:
-    if name not in AGGREGATORS:
-        raise KeyError(f"unknown aggregator '{name}'; have "
-                       f"{sorted(AGGREGATORS)}")
-    return AGGREGATORS[name]
+    return AGGREGATORS.get(name)

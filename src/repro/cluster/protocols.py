@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.cluster import scheduler
 from repro.cluster.scheduler import ClusterSpec, Trace
+from repro.core.registry import Registry, make_factory
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,7 +198,7 @@ class LAQ:
                                       quorum=self.quorum)
 
 
-PROTOCOLS: dict[str, Callable[..., Any]] = {
+PROTOCOLS: Registry = Registry("protocol", {
     "sync_ps": SyncPS,
     "async_ps": AsyncPS,
     "local_sgd": LocalSGD,
@@ -205,13 +206,9 @@ PROTOCOLS: dict[str, Callable[..., Any]] = {
     "dcd": CompressedDecentralized,
     "ecd": ECDecentralized,
     "laq": LAQ,
-}
+})
 
-
-def make_protocol(name: str, **kw) -> Any:
-    if name not in PROTOCOLS:
-        raise KeyError(f"unknown protocol '{name}'; have {sorted(PROTOCOLS)}")
-    return PROTOCOLS[name](**kw)
+make_protocol = make_factory(PROTOCOLS)
 
 
 def staleness_schedule(trace: Trace, *, tau: Optional[int] = None

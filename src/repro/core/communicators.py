@@ -827,7 +827,9 @@ class ECDGossipExchange(DCDGossipExchange):
     error_compensated = True
 
 
-EXCHANGES: dict[str, Callable[..., Any]] = {
+from repro.core.registry import Registry, make_factory  # noqa: E402
+
+EXCHANGES: Registry = Registry("exchange", {
     "mbsgd": MbSGDExchange,
     "csgd_ps": CSGDPSExchange,
     "csgd_ring": CSGDRingExchange,
@@ -840,10 +842,6 @@ EXCHANGES: dict[str, Callable[..., Any]] = {
     # stateful compressed-gossip operators (replica state via init_stacked)
     "dcd": DCDGossipExchange,
     "ecd": ECDGossipExchange,
-}
+})
 
-
-def make_exchange(name: str, **kw) -> Any:
-    if name not in EXCHANGES:
-        raise KeyError(f"unknown exchange '{name}'; have {sorted(EXCHANGES)}")
-    return EXCHANGES[name](**kw)
+make_exchange = make_factory(EXCHANGES)

@@ -890,10 +890,14 @@ def identity(x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
 
 # ---------------------------------------------------------------------------
 # Registry: name -> Codec (the only compression entry point for
-# communicators, train steps, eventsim, and benchmarks).
+# communicators, train steps, eventsim, and benchmarks). A
+# ``repro.core.registry.Registry`` of ready instances, sharing the
+# lookup/error idiom with EXCHANGES / PROTOCOLS / AGGREGATORS.
 # ---------------------------------------------------------------------------
 
-CODECS: dict[str, Codec] = {
+from repro.core.registry import Registry  # noqa: E402
+
+CODECS: Registry = Registry("compression", {
     "none": QdqCodec(identity,
                      CompressionSpec("none", True, 32.0, overhead_bytes=0)),
     "rq8": QuantCodec(8),
@@ -906,13 +910,11 @@ CODECS: dict[str, Codec] = {
                        CompressionSpec("topk_1", False, 32.0, density=0.01)),
     "sign1": QdqCodec(onebit_sign, CompressionSpec("sign1", False, 1.0)),
     "clip16": QdqCodec(clip_lowbits, CompressionSpec("clip16", False, 16.0)),
-}
+})
 
 
 def codec(name: str) -> Codec:
-    if name not in CODECS:
-        raise KeyError(f"unknown compression '{name}'; have {sorted(CODECS)}")
-    return CODECS[name]
+    return CODECS.get(name)
 
 
 # Legacy view: name -> (fn(x, key) -> x_hat, CompressionSpec). Kept ONLY so

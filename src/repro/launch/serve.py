@@ -1,96 +1,59 @@
-"""Serving launcher: batched autoregressive decode with KV/recurrent caches.
+"""Serving launcher — a thin argv shim over ``repro.serve.run``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-      --batch 4 --prompt-len 32 --gen 64 [--window 16]
+      --slots 4 --requests 16 --prompt-len 32 --gen 64 [--window 16] \
+      [--mode static]
 
-Prompts are synthetic token streams; the loop reports per-step latency and
-tokens/sec. The same serve_step lowers against the production mesh in
-launch/dryrun.py (decode_32k / long_500k input shapes).
+The engine itself (continuous batching, admission control, slot-paged
+decode states, checkpoint hot-swap) lives in ``repro.serve``; this
+module only parses flags into a ``ServeConfig`` and prints the
+``ServeResult`` summary. Programmatic callers should skip argv and call
+``serve.run(ServeConfig(...))`` directly — that is the supported API,
+and what ``examples/serve_batched.py`` and ``benchmarks/serve_bench.py``
+do.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro import configs
-from repro.models import transformer_scan
-from repro.train import steps
+from repro import serve
 
 
-def main(argv=None):
+def build_config(args) -> serve.ServeConfig:
+    n_requests = args.requests if args.requests else args.slots
+    return serve.ServeConfig(
+        arch=args.arch, reduced=args.reduced, slots=args.slots,
+        max_len=args.prompt_len + args.gen + 1, window=args.window,
+        mode=args.mode, temperature=args.temperature, seed=args.seed,
+        n_requests=n_requests, prompt_len=args.prompt_len,
+        gen_tokens=args.gen, mixed_gen=tuple(args.mixed_gen or ()))
+
+
+def main(argv=None) -> serve.ServeResult:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
+                    help="decode lanes (the old --batch)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="synthetic requests to serve (default: one per "
+                         "slot)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--mixed-gen", type=int, nargs="*", default=None,
+                    help="cycle these generation lengths across requests "
+                         "(the mixed-length workload)")
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window KV cache size (0 = full)")
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = configs.get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = transformer_scan.init(cfg, key)
-    max_len = args.prompt_len + args.gen + 1
-    memory = None
-    if cfg.is_encdec:
-        memory = transformer_scan.encode(
-            params, cfg,
-            jax.random.normal(key, (args.batch, args.prompt_len,
-                                    cfg.d_model)) * 0.02)
-    state = transformer_scan.init_decode_state(
-        params, cfg, args.batch, max_len, window=args.window,
-        dtype=jnp.float32, memory=memory)
-    serve_step = jax.jit(steps.make_serve_step(cfg, scan_layers=True),
-                         donate_argnums=(1,))
-
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-
-    def feed(tok):
-        if cfg.frontend == "token":
-            return {"tokens": tok}
-        return {"embeddings": jax.random.normal(
-            jax.random.fold_in(key, int(tok[0, 0])),
-            (args.batch, 1, cfg.d_model)) * 0.02}
-
-    # prompt processing: token-by-token cache fill (bulk prefill is a
-    # recorded §Perf optimization)
-    t0 = time.time()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, state = serve_step(params, state, feed(prompts[:, i:i + 1]))
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    tok = jnp.argmax(logits, -1)[:, None]
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen):
-        logits, state = serve_step(params, state, feed(tok))
-        gkey = jax.random.fold_in(key, 1000 + i)
-        if args.temperature > 0:
-            tok = jax.random.categorical(
-                gkey, logits / args.temperature, axis=-1)[:, None]
-        else:
-            tok = jnp.argmax(logits, -1)[:, None]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_gen = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"[serve] arch={cfg.arch_id} batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen}")
-    print(f"[serve] prompt phase {t_prefill:.2f}s | decode "
-          f"{t_gen:.2f}s = {args.gen * args.batch / max(t_gen, 1e-9):.1f} tok/s")
-    print(f"[serve] sample tokens[0,:16]: {gen[0, :16].tolist()}")
-    return gen
+    result = serve.run(build_config(args))
+    print(serve.format_result(result))
+    return result
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""Serving tier: continuous-batching engine + live checkpoint hot-swap.
+
+Public surface:
+
+    from repro import serve
+
+    cfg = serve.ServeConfig(slots=4, n_requests=16, mixed_gen=(4, 8, 32))
+    res = serve.run(cfg)                     # ServeResult
+
+    eng = serve.Engine(cfg)                  # request-level control
+    rid = eng.submit(tokens, max_new_tokens=32)
+    eng.subscribe(channel); eng.run()
+
+    ch = serve.CheckpointChannel()           # train -> serve wire
+    serve.publish_train_state(ch, train_state, codec="rq8")
+
+See engine.py (slot plane, admission, the tick), channel.py (framed
+compressed-checkpoint pub/sub), api.py (run/ServeResult).
+"""
+from repro.serve.api import (ServeResult, format_result, run,
+                             synthetic_requests)
+from repro.serve.channel import (CheckpointChannel, PublishedCheckpoint,
+                                 publish_train_state)
+from repro.serve.engine import (AdmissionError, Completion, Engine,
+                                Request, ServeConfig)
+
+__all__ = [
+    "AdmissionError", "CheckpointChannel", "Completion", "Engine",
+    "PublishedCheckpoint", "Request", "ServeConfig", "ServeResult",
+    "format_result", "publish_train_state", "run", "synthetic_requests",
+]

@@ -1,0 +1,431 @@
+"""Request-level serving engine: continuous batching + live hot-swap.
+
+``Engine`` owns a fixed pool of ``slots`` decode lanes over ONE jitted,
+slot-vmapped decode step. Each slot is an independent batch=1 decode
+state (its own ring-buffer KV / recurrent state, its own position
+cursor) stacked along a leading slot axis — ``jax.vmap`` over that axis
+turns the per-slot scalar cursors of ``attention.init_cache`` into a
+per-slot data plane without touching any model code. The engine tick
+is:
+
+  1. **swap** — poll the subscribed ``CheckpointChannel``; a fresh
+     framed checkpoint is CRC-verified, decoded, and becomes the params
+     argument of the NEXT decode dispatch. In-flight requests keep
+     their caches and keep decoding (zero drops); a corrupt publish is
+     rejected and the serving params stay untouched.
+  2. **admit** — pop queued requests into free slots: one fused bulk-
+     prefill call per request (``steps.make_bulk_prefill`` — a
+     ``lax.scan`` of the decode step, bit-identical to token-by-token)
+     fills a fresh batch=1 state, samples the first token, and a jitted
+     splice writes it into the stacked plane at the slot index.
+  3. **decode** — one vmapped decode step over all slots; finished
+     sequences free their slots mid-batch and step 2 splices queued
+     requests in without restarting anything (continuous batching).
+
+``mode="static"`` degrades the same machinery into the old gang-
+scheduled baseline — slots are admitted batch-at-a-time and a finished
+sequence's slot stays dead until the WHOLE batch drains — which is what
+``benchmarks/serve_bench.py`` measures continuous batching against.
+
+Admission control: a bounded queue (``max_queue``) and a per-request
+capacity check (prompt + new tokens must fit the slot's ``max_len``
+cache) — violations raise ``AdmissionError`` at submit time instead of
+corrupting a ring buffer mid-decode.
+
+Everything observable threads through the ``obs`` tier: per-request
+spans on the host track, queue-depth gauges, admitted/completed/
+rejected/swap counters, latency and tokens/s come out of
+``Engine.stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, obs
+from repro.core import compression
+from repro.models import transformer_scan
+from repro.obs import trace as obs_trace
+from repro.serve.channel import CheckpointChannel, PublishedCheckpoint
+from repro.train import steps
+
+PyTree = Any
+
+
+class AdmissionError(RuntimeError):
+    """A request was refused at the door: queue full, or the prompt +
+    generation budget cannot fit the slot cache."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Typed engine configuration (the programmatic entry point's input;
+    ``launch/serve.py`` is a thin argv->ServeConfig shim).
+
+    max_len bounds each slot's cache: a request needs
+    prompt_len + max_new_tokens - 1 <= max_len slots.
+    mixed_gen, when non-empty, cycles per-request generation lengths for
+    the synthetic workload of ``serve.run`` (the heavy-traffic mixed-
+    length case continuous batching exists for); gen_tokens is the
+    uniform fallback.
+    """
+
+    arch: str = "qwen1.5-0.5b"
+    reduced: bool = True
+    slots: int = 4
+    max_queue: int = 64
+    max_len: int = 96
+    window: int = 0               # sliding-window KV slots (0 = full)
+    mode: str = "continuous"      # continuous | static
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+    # synthetic-workload knobs (serve.run)
+    n_requests: int = 8
+    prompt_len: int = 12
+    gen_tokens: int = 16
+    mixed_gen: tuple = ()
+    # checkpoint channel
+    checkpoint_codec: str = "rq8"
+
+    def __post_init__(self):
+        if self.mode not in ("continuous", "static"):
+            raise ValueError(f"mode must be continuous|static, "
+                             f"got '{self.mode}'")
+        if self.slots < 1:
+            raise ValueError("need at least one slot")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: list                  # generated token ids
+    latency_s: float              # submit -> last token
+    finished_at: float = 0.0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class _Active:
+    """A slot's in-flight bookkeeping (host side)."""
+
+    request: Request
+    generated: list
+    remaining: int                # decode steps left after prefill
+    done: bool = False            # static mode: finished but slot held
+
+
+class Engine:
+    """The serving facade: submit -> step/run -> results."""
+
+    def __init__(self, cfg: ServeConfig, *,
+                 params: Optional[PyTree] = None,
+                 model_cfg=None,
+                 key: Optional[jax.Array] = None):
+        self.cfg = cfg
+        mc = model_cfg if model_cfg is not None \
+            else configs.get_config(cfg.arch)
+        if model_cfg is None and cfg.reduced:
+            mc = mc.reduced()
+        if mc.frontend != "token":
+            raise ValueError(
+                f"the serve engine speaks token frontends only; "
+                f"'{mc.arch_id}' has frontend '{mc.frontend}'")
+        self.model_cfg = mc
+        key = jax.random.PRNGKey(cfg.seed) if key is None else key
+        self._key = key
+        self.params = params if params is not None \
+            else transformer_scan.init(mc, key)
+
+        # -- jitted data plane ------------------------------------------
+        serve_step = steps.make_serve_step(mc, scan_layers=True)
+        bulk_prefill = steps.make_bulk_prefill(mc, scan_layers=True)
+        S, temp = cfg.slots, cfg.temperature
+
+        def _decode(params, state, toks, key):
+            """(S,1,1) tokens through every slot lane; sample next."""
+            logits, state = jax.vmap(
+                lambda st, tok: serve_step(params, st, {"tokens": tok}),
+                in_axes=(0, 0))(state, toks)
+            logits = logits[:, 0]                       # (S, vocab)
+            nxt = _sample(logits, key, temp, S)
+            return nxt.reshape(S, 1, 1), logits, state
+
+        def _prefill(params, state1, toks, key):
+            """One request's fused cache fill; toks (1, P)."""
+            logits, state1 = bulk_prefill(params, state1, toks)
+            nxt = _sample(logits, key, temp, 1)
+            return nxt.reshape(1, 1), logits, state1
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(_prefill)
+        self._splice_fn = _splice
+
+        # -- slot-paged decode-state plane ------------------------------
+        # one batch=1 state per slot, stacked on a leading slot axis;
+        # _fresh is the reusable template a prefill starts from
+        self._fresh = transformer_scan.init_decode_state(
+            self.params, mc, 1, cfg.max_len, window=cfg.window,
+            dtype=jnp.float32)
+        self._state = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (S,) + a.shape) + 0,
+            self._fresh)
+        self._tokens = jnp.zeros((S, 1, 1), jnp.int32)
+
+        # -- host bookkeeping -------------------------------------------
+        self._slots: list[Optional[_Active]] = [None] * S
+        self._queue: deque[Request] = deque()
+        self._results: dict[int, Completion] = {}
+        self._next_rid = 0
+        self._step_idx = 0
+        self._t0 = time.monotonic()
+        self.counters = {"admitted": 0, "completed": 0, "rejected": 0,
+                         "dropped": 0, "generated_tokens": 0,
+                         "swaps": 0, "swaps_rejected": 0}
+
+        # -- checkpoint subscription ------------------------------------
+        self._channel: Optional[CheckpointChannel] = None
+        self._seen_seq = 0
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, tokens, max_new_tokens: int,
+               rid: Optional[int] = None) -> int:
+        """Enqueue one request. Raises AdmissionError when the queue is
+        full or the request cannot fit a slot cache."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise AdmissionError("max_new_tokens must be >= 1")
+        need = len(tokens) + max_new_tokens - 1
+        cap = self.cfg.max_len if self.cfg.window == 0 else None
+        if cap is not None and need > cap:
+            self._count("rejected")
+            raise AdmissionError(
+                f"request needs {need} cache slots "
+                f"(prompt {len(tokens)} + {max_new_tokens} new) but "
+                f"max_len is {cap}")
+        if len(self._queue) >= self.cfg.max_queue:
+            self._count("rejected")
+            raise AdmissionError(
+                f"queue full ({self.cfg.max_queue} pending)")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self._queue.append(Request(rid, tokens, int(max_new_tokens),
+                                   time.monotonic()))
+        if obs.enabled("metrics"):
+            obs.gauge("serve.queue_depth").set(len(self._queue))
+        return rid
+
+    # -- checkpoint hot-swap -----------------------------------------------
+
+    def subscribe(self, channel: CheckpointChannel) -> None:
+        """Watch a channel; ``step`` applies fresh checkpoints between
+        decode dispatches."""
+        self._channel = channel
+
+    def maybe_swap(self) -> bool:
+        """Apply the newest published checkpoint, if any. Returns True
+        on a swap; a corrupt publish is rejected (counted, params kept)
+        and its seq marked seen so one bad message can't wedge the
+        engine in a retry loop."""
+        if self._channel is None:
+            return False
+        pub = self._channel.poll(self._seen_seq)
+        if pub is None:
+            return False
+        self._seen_seq = pub.seq
+        try:
+            new_params = CheckpointChannel.decode(pub)
+        except compression.WireCorruptionError:
+            self._count("swaps_rejected")
+            if obs.enabled("metrics"):
+                obs.counter("serve.swap.rejected").inc()
+            return False
+        self.params = new_params
+        self._count("swaps")
+        if obs.enabled("metrics"):
+            obs.counter("serve.swap.applied").inc()
+        if obs.enabled("trace"):
+            obs_trace.tracer().instant(
+                f"hot-swap seq={pub.seq} step={pub.step}",
+                worker=obs_trace.HOST, lane="host",
+                t=time.monotonic() - self._t0, cat="serve.swap")
+        return True
+
+    # -- the engine tick ---------------------------------------------------
+
+    def step(self) -> bool:
+        """One tick: swap -> admit -> one vmapped decode step.
+        Returns False once idle (no active slots, empty queue)."""
+        self.maybe_swap()
+        self._admit()
+        if not any(a is not None and not a.done for a in self._slots):
+            return bool(self._queue)
+        key = jax.random.fold_in(self._key, self._step_idx)
+        nxt, _, self._state = self._decode_fn(
+            self.params, self._state, self._tokens, key)
+        self._tokens = nxt
+        self._step_idx += 1
+        toks = np.asarray(nxt).reshape(-1)
+        for slot, active in enumerate(self._slots):
+            if active is None or active.done:
+                continue
+            active.generated.append(int(toks[slot]))
+            self._count("generated_tokens")
+            active.remaining -= 1
+            if active.remaining <= 0:
+                self._finish(slot)
+        return True
+
+    def run(self) -> None:
+        """Drive ticks until every queued/active request completed."""
+        while self.step():
+            pass
+
+    def warmup(self, prompt_lens=()) -> None:
+        """Compile the decode dispatch and each distinct prefill length
+        outside the timed path (serve_bench excludes compile time the
+        same way the kernel benches do)."""
+        key = jax.random.PRNGKey(0)
+        for plen in sorted(set(int(p) for p in prompt_lens)):
+            toks = jnp.zeros((1, plen), jnp.int32)
+            jax.block_until_ready(
+                self._prefill_fn(self.params, self._fresh, toks, key))
+        state = jax.tree_util.tree_map(jnp.copy, self._state)
+        out = self._decode_fn(self.params, state, self._tokens, key)
+        jax.block_until_ready(out[0])
+
+    # -- results -----------------------------------------------------------
+
+    def result(self, rid: int) -> Optional[Completion]:
+        return self._results.get(rid)
+
+    @property
+    def completions(self) -> dict[int, Completion]:
+        return dict(self._results)
+
+    def stats(self) -> dict:
+        """Aggregate throughput/latency over completed requests."""
+        lats = sorted(c.latency_s for c in self._results.values())
+        wall = time.monotonic() - self._t0
+        out = dict(self.counters)
+        out.update({
+            "wall_s": wall,
+            "decode_steps": self._step_idx,
+            "tokens_per_s": (self.counters["generated_tokens"] / wall
+                             if wall > 0 else 0.0),
+            "p50_ms": _percentile(lats, 50), "p99_ms": _percentile(lats, 99),
+        })
+        return out
+
+    # -- internals ---------------------------------------------------------
+
+    def _count(self, name: str, v: int = 1) -> None:
+        self.counters[name] += v
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, a in enumerate(self._slots) if a is None]
+
+    def _admit(self) -> None:
+        free = self._free_slots()
+        if self.cfg.mode == "static" and len(free) < len(self._slots):
+            # gang scheduling: a new batch only forms once the pool is
+            # fully drained (this is the baseline's whole pathology)
+            return
+        while self._queue and free:
+            self._place(self._queue.popleft(), free.pop(0))
+        if obs.enabled("metrics"):
+            obs.gauge("serve.queue_depth").set(len(self._queue))
+
+    def _place(self, req: Request, slot: int) -> None:
+        """Prefill ``req`` into a fresh batch=1 state and splice it into
+        the stacked plane at ``slot`` — the mid-decode admission path."""
+        # per-request sampling key, disjoint from the per-step decode
+        # keys (which fold in the small non-negative step index)
+        key = jax.random.fold_in(self._key, 0x7FFFFFFF - req.rid)
+        toks = jnp.asarray(req.tokens, jnp.int32)[None]
+        tok, _, state1 = self._prefill_fn(self.params, self._fresh, toks,
+                                          key)
+        self._state = self._splice_fn(self._state, state1, slot)
+        self._tokens = self._tokens.at[slot, 0, 0].set(tok[0, 0])
+        first = int(np.asarray(tok).reshape(())[()])
+        active = _Active(req, [first], req.max_new_tokens - 1)
+        self._slots[slot] = active
+        self._count("admitted")
+        self._count("generated_tokens")
+        if obs.enabled("metrics"):
+            obs.counter("serve.admitted").inc()
+        if active.remaining <= 0:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        active = self._slots[slot]
+        now = time.monotonic()
+        comp = Completion(active.request.rid, len(active.request.tokens),
+                          active.generated,
+                          now - active.request.submitted_at, now)
+        self._results[comp.rid] = comp
+        self._count("completed")
+        if obs.enabled("metrics"):
+            obs.counter("serve.completed").inc()
+            obs.histogram("serve.latency_ms").observe(
+                comp.latency_s * 1e3)
+        if obs.enabled("trace"):
+            obs_trace.tracer().sim_span(
+                f"request {comp.rid}", worker=obs_trace.HOST, lane="host",
+                t0=active.request.submitted_at - self._t0,
+                t1=now - self._t0, cat="serve.request",
+                args={"prompt": comp.prompt_len,
+                      "generated": comp.n_generated})
+        if self.cfg.mode == "static":
+            # hold the slot dead until the gang drains
+            active.done = True
+            if all(a is None or a.done for a in self._slots):
+                self._slots = [None] * len(self._slots)
+        else:
+            self._slots[slot] = None
+
+
+def _sample(logits, key, temperature: float, n: int):
+    """Greedy or temperature sampling over (n, vocab) logits."""
+    if temperature > 0:
+        keys = jax.random.split(key, n)
+        return jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / temperature)
+        )(keys, logits).astype(jnp.int32)
+    return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _splice(stacked: PyTree, state1: PyTree, slot) -> PyTree:
+    """Write a batch=1 decode state into the stacked plane at ``slot``
+    (traced index -> one compiled splice serves every slot)."""
+    return jax.tree_util.tree_map(
+        lambda s, n: jax.lax.dynamic_update_index_in_dim(s, n, slot, 0),
+        stacked, state1)
+
+
+def _percentile(sorted_vals: list, q: float) -> float:
+    """q-th percentile (ms) of pre-sorted latency seconds."""
+    if not sorted_vals:
+        return 0.0
+    return float(np.percentile(np.asarray(sorted_vals), q) * 1e3)

@@ -174,14 +174,49 @@ def make_serve_step(cfg: ModelConfig, *, scan_layers: bool = False):
     return serve_step
 
 
+def make_bulk_prefill(cfg: ModelConfig, *, scan_layers: bool = False):
+    """Bulk cache fill: (params, decode_state, tokens (B, S)) ->
+    (last_logits (B, V), filled decode_state) in ONE fused call.
+
+    This is the recorded §Perf optimization that replaces the serving
+    tier's token-by-token Python prompt loop (one dispatch per prompt
+    position) with a single ``lax.scan`` of ``decode_step`` over the
+    prompt axis — one compiled program, one dispatch, per prompt LENGTH
+    instead of per prompt TOKEN. Because the scan body IS the decode
+    step, the filled cache and the per-position logits are bit-identical
+    to the incremental path by construction, across every block family
+    (attn ring-buffer KV, MLA, RWKV/RG-LRU recurrent state) — asserted
+    in tests/test_serve.py.
+
+    Token-frontend models only (the serving engine's domain); the
+    embedding frontends go through ``make_prefill_step`` below.
+    """
+    impl = _impl(scan_layers)
+    if cfg.frontend != "token":
+        raise ValueError(
+            f"bulk prefill needs a token frontend, got '{cfg.frontend}'")
+
+    def bulk_prefill(params, decode_state, tokens):
+        def body(state, tok):
+            logits, state = impl.decode_step(params, cfg,
+                                             {"tokens": tok[:, None]}, state)
+            return state, logits[:, -1]
+
+        state, logits = jax.lax.scan(body, decode_state,
+                                     jnp.moveaxis(tokens, 1, 0))
+        return logits[-1], state
+
+    return bulk_prefill
+
+
 def make_prefill_step(cfg: ModelConfig, *, use_flash: bool = False,
                       scan_layers: bool = False,
                       logits_positions: str = "all"):
     """prefill: full-sequence forward returning last-position logits.
 
-    (Prefill reuses `apply`; cache population for subsequent decode is done
-    by running decode_step over the prompt in the serving example — bulk
-    cache prefill is a recorded future optimization in EXPERIMENTS §Perf.)
+    (Cache population for subsequent decode goes through
+    ``make_bulk_prefill`` above; this full-sequence forward remains the
+    logits-only path the dry-run input shapes lower.)
     """
 
     impl = _impl(scan_layers)

@@ -1,0 +1,313 @@
+"""Serving engine: continuous batching, bulk prefill, checkpoint
+hot-swap, admission control, and the shared registry idiom.
+
+The load-bearing assertions:
+
+  * bulk prefill (one fused lax.scan cache fill) is BIT-identical to
+    the token-by-token serve_step loop — logits and every decode-state
+    leaf — across block families and for the windowed ring cache;
+  * continuous batching is semantically invisible: every request's
+    greedy token stream equals an unbatched solo decode of the same
+    request, even as finished sequences free slots mid-decode and
+    queued requests are spliced in;
+  * a hot swap mid-decode completes all in-flight requests (zero
+    drops) and post-swap decode is bit-identical to a cold start from
+    the same published checkpoint;
+  * a corrupt published checkpoint (bit flip, or framed NaN garbage)
+    is rejected without disturbing the serving params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro.core import compression
+from repro.core.registry import Registry
+from repro.models import transformer_scan
+from repro.train import steps
+
+
+def _cfg(**kw):
+    base = dict(slots=2, max_len=32, prompt_len=6, n_requests=4,
+                mixed_gen=(3, 7), seed=1)
+    base.update(kw)
+    return serve.ServeConfig(**base)
+
+
+def _prompt(mc, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, mc.vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# bulk prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,window", [("qwen1.5-0.5b", 0),
+                                         ("qwen1.5-0.5b", 4),
+                                         ("rwkv6-3b", 0)])
+def test_bulk_prefill_bit_identical(arch, window):
+    """One fused cache fill == the token-by-token loop, bit for bit
+    (logits AND every state leaf), including the ring-buffer cache."""
+    mc = configs.get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = transformer_scan.init(mc, key)
+    B, P = 2, 9
+    toks = jax.random.randint(key, (B, P), 0, mc.vocab)
+    st0 = transformer_scan.init_decode_state(params, mc, B, P + 4,
+                                             window=window,
+                                             dtype=jnp.float32)
+    serve_step = jax.jit(steps.make_serve_step(mc, scan_layers=True))
+    st = st0
+    for i in range(P):
+        logits, st = serve_step(params, st, {"tokens": toks[:, i:i + 1]})
+    bulk = jax.jit(steps.make_bulk_prefill(mc, scan_layers=True))
+    blogits, bst = bulk(params, st0, toks)
+    assert jnp.array_equal(logits, blogits)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(bst)):
+        assert jnp.array_equal(a, b)
+
+
+def test_bulk_prefill_rejects_non_token_frontends():
+    mc = configs.get_config("seamless-m4t-large-v2").reduced()
+    with pytest.raises(ValueError, match="token frontend"):
+        steps.make_bulk_prefill(mc, scan_layers=True)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+def _solo_decode(params, mc, tokens, gen, max_len):
+    """Unbatched greedy reference: one request, a plain serve_step loop."""
+    serve_step = jax.jit(steps.make_serve_step(mc, scan_layers=True))
+    st = transformer_scan.init_decode_state(params, mc, 1, max_len,
+                                            dtype=jnp.float32)
+    logits = None
+    for i in range(len(tokens)):
+        logits, st = serve_step(
+            params, st, {"tokens": jnp.asarray(tokens[i:i + 1])[None]})
+    out = [int(jnp.argmax(logits, -1)[0])]
+    for _ in range(gen - 1):
+        logits, st = serve_step(params, st,
+                                {"tokens": jnp.asarray([[out[-1]]])})
+        out.append(int(jnp.argmax(logits, -1)[0]))
+    return out
+
+
+def test_continuous_batching_matches_solo_decode():
+    """Slot splicing is invisible: every request's greedy stream equals
+    its unbatched solo decode — finished slots freed mid-batch, queued
+    requests admitted without restarting anything."""
+    cfg = _cfg(n_requests=6, mixed_gen=(3, 8))
+    eng = serve.Engine(cfg)
+    reqs = serve.synthetic_requests(cfg)
+    res = serve.run(cfg, engine=eng, requests=reqs)
+    assert res.n_completed == 6
+    assert res.counters["dropped"] == 0
+    # more requests than slots => slots were recycled mid-decode
+    assert res.counters["admitted"] == 6 > cfg.slots
+    for r in reqs:
+        ref = _solo_decode(eng.params, eng.model_cfg, r.tokens,
+                           r.max_new_tokens, cfg.max_len)
+        assert res.completions[r.rid].tokens == ref
+
+
+def test_static_mode_wastes_steps_on_mixed_lengths():
+    """The gang-scheduled baseline needs strictly more decode steps for
+    the same mixed-length workload (that gap is what BENCH_serve
+    measures as tokens/s)."""
+    results = {}
+    for mode in ("static", "continuous"):
+        cfg = _cfg(mode=mode, n_requests=8, mixed_gen=(2, 10))
+        results[mode] = serve.run(cfg)
+    assert results["static"].n_completed == 8
+    assert results["continuous"].n_completed == 8
+    assert (results["continuous"].decode_steps
+            < results["static"].decode_steps)
+    # identical streams either way: batching policy is not semantics
+    for rid in range(8):
+        assert (results["static"].completions[rid].tokens
+                == results["continuous"].completions[rid].tokens)
+
+
+def test_admission_control():
+    cfg = _cfg(max_queue=2)
+    eng = serve.Engine(cfg)
+    mc = eng.model_cfg
+    # oversized request: prompt + new tokens cannot fit the slot cache
+    with pytest.raises(serve.AdmissionError, match="cache slots"):
+        eng.submit(_prompt(mc, 30), 10)
+    eng.submit(_prompt(mc, 4), 2)
+    eng.submit(_prompt(mc, 4), 2)
+    with pytest.raises(serve.AdmissionError, match="queue full"):
+        eng.submit(_prompt(mc, 4), 2)
+    assert eng.counters["rejected"] == 2
+    eng.run()
+    assert eng.counters["completed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hot-swap
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_zero_drops_and_bit_identical_to_cold_start():
+    """The acceptance triple: (a) in-flight requests complete across
+    the swap, zero dropped; (b) post-swap decode of a fresh request is
+    bit-identical to a cold start from the SAME published checkpoint;
+    (c) the swap actually happened."""
+    cfg = _cfg(slots=2, max_len=48)
+    eng = serve.Engine(cfg)
+    channel = serve.CheckpointChannel()
+    eng.subscribe(channel)
+    eng.warmup([6])
+    mc = eng.model_cfg
+
+    in_flight = eng.submit(_prompt(mc, 6, seed=5), 16)
+    for _ in range(4):
+        eng.step()
+    assert eng.result(in_flight) is None      # genuinely mid-decode
+
+    trained = transformer_scan.init(mc, jax.random.PRNGKey(42))
+    pub = channel.publish(trained, step=11, codec="rq8")
+    post_swap = eng.submit(_prompt(mc, 6, seed=6), 8)
+    eng.run()
+
+    assert eng.counters["swaps"] == 1
+    assert eng.counters["dropped"] == 0
+    assert eng.result(in_flight).n_generated == 16
+
+    # cold start from the published wire message (decode is frame-
+    # verified: what the server holds IS what a restart would load)
+    cold = serve.Engine(cfg, params=serve.CheckpointChannel.decode(pub))
+    cold.warmup([6])
+    rid = cold.submit(_prompt(mc, 6, seed=6), 8)
+    cold.run()
+    assert eng.result(post_swap).tokens == cold.result(rid).tokens
+
+
+def test_corrupt_checkpoint_rejected_without_disturbing_params():
+    cfg = _cfg(slots=1)
+    eng = serve.Engine(cfg)
+    channel = serve.CheckpointChannel()
+    eng.subscribe(channel)
+    mc = eng.model_cfg
+    params_before = eng.params
+
+    good = channel.publish(transformer_scan.init(mc, jax.random.PRNGKey(3)),
+                           step=1)
+    # flip one payload bit, keep the original frame -> CRC must fail
+    channel.publish_packed(compression.flip_bit(good.packed, 77),
+                           good.crc, step=2)
+    assert not eng.maybe_swap()
+    assert eng.counters["swaps_rejected"] == 1
+    assert eng.params is params_before
+
+    # framed-but-garbage publish: NaN params pass the CRC (the frame is
+    # honest) and must die on the post-decode finite guard instead
+    nan_params = jax.tree_util.tree_map(
+        lambda a: jnp.full_like(a, jnp.nan), params_before)
+    with pytest.raises(compression.WireCorruptionError, match="NaN"):
+        serve.CheckpointChannel.decode(channel.publish(nan_params, step=3))
+    assert not eng.maybe_swap()
+    assert eng.params is params_before
+    assert eng.counters["swaps_rejected"] == 2
+
+    # the channel still works after rejects: a good publish swaps
+    channel.publish(transformer_scan.init(mc, jax.random.PRNGKey(4)),
+                    step=4)
+    assert eng.maybe_swap()
+    assert eng.params is not params_before
+
+
+def test_publish_train_state_closes_the_loop():
+    """The trainer-side one-liner: params straight off a live train
+    state, decoded back to the exact rq8 x_hat the wire carries."""
+    from repro.optim.optimizers import sgd
+    mc = configs.get_config("qwen1.5-0.5b").reduced()
+    opt = sgd(0.1)
+    state = steps.init_train_state(mc, opt, jax.random.PRNGKey(0))
+    channel = serve.CheckpointChannel()
+    pub = serve.publish_train_state(channel, state, codec="rq8")
+    assert pub.step == 0 and pub.codec == "rq8"
+    decoded = serve.CheckpointChannel.decode(pub)
+    want = compression.codec("rq8").tree_decode_flat(pub.packed)
+    for a, b in zip(jax.tree_util.tree_leaves(decoded),
+                    jax.tree_util.tree_leaves(want)):
+        assert jnp.array_equal(a, b)
+    # compressed wire format is really smaller than fp32
+    fp32 = sum(l.size * 4 for l in jax.tree_util.tree_leaves(
+        state["params"]))
+    assert pub.wire_bytes < 0.3 * fp32
+
+
+# ---------------------------------------------------------------------------
+# programmatic entry point
+# ---------------------------------------------------------------------------
+
+
+def test_run_is_the_single_entry_point():
+    cfg = _cfg(n_requests=3, mixed_gen=(2, 4))
+    res = serve.run(cfg)
+    assert isinstance(res, serve.ServeResult)
+    assert res.n_completed == 3
+    assert res.total_tokens == sum(
+        c.n_generated for c in res.completions.values())
+    assert res.tokens_per_s > 0 and res.p99_ms >= res.p50_ms
+    row = res.row(scenario="x")
+    assert row["scenario"] == "x" and row["dropped"] == 0
+
+    # the CLI is a shim over the same function
+    from repro.launch import serve as serve_cli
+    out = serve_cli.main(["--reduced", "--slots", "2", "--prompt-len", "4",
+                          "--gen", "3", "--requests", "3"])
+    assert isinstance(out, serve.ServeResult) and out.n_completed == 3
+
+
+# ---------------------------------------------------------------------------
+# the shared registry idiom
+# ---------------------------------------------------------------------------
+
+
+def test_registry_uniform_error_and_mapping_protocol():
+    reg = Registry("widget", {"a": int})
+    assert "a" in reg and sorted(reg) == ["a"] and len(reg) == 1
+    assert reg.get("a") is int and reg.make("a") == 0
+    with pytest.raises(KeyError, match=r"unknown widget 'b'; have \['a'\]"):
+        reg["b"]
+
+    @reg.register("b")
+    class B:
+        pass
+
+    assert reg.make("b").__class__ is B
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", float)
+    reg.replace("a", float)
+    assert reg.get("a") is float
+
+
+def test_all_four_registries_share_the_idiom():
+    from repro import cluster
+    from repro.core import communicators, compression as comp
+    from repro.cluster import aggregators
+
+    for registry, sample in [(communicators.EXCHANGES, "csgd_ring"),
+                             (cluster.PROTOCOLS, "sync_ps"),
+                             (comp.CODECS, "rq4"),
+                             (aggregators.AGGREGATORS, "mean")]:
+        assert isinstance(registry, Registry)
+        assert sample in registry
+        with pytest.raises(KeyError,
+                           match=f"unknown {registry.kind} 'nope'"):
+            registry["nope"]
+    # factories and accessors still work as before the migration
+    assert communicators.make_exchange("gossip", topology=None)
+    assert cluster.make_protocol("local_sgd", period_h=4).period_h == 4
+    assert comp.codec("rq8").bits == 8
+    assert aggregators.aggregator("mean") is aggregators.mean
